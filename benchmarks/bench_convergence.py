@@ -1,0 +1,159 @@
+"""Paper Table 1 + Figures 3/4 analogue: time-to-target-loss for
+Sparrow (1 and 10 workers) vs XGBoost-like exact greedy vs
+LightGBM-like GOSS on the synthetic splice-site analogue.
+
+Cost model (mirrors the paper's hardware setting):
+  * reading one example from the in-memory working set: MEM = 0.25
+  * reading one example from disk-resident data:        DISK = 1.0
+  * one incremental stump eval:                         0.1 x read
+The in-memory baselines (the paper's x1e.xlarge rows) scan all n from
+RAM each round; Sparrow scans its m-example sample from RAM and pays
+DISK for each Sampler pass over the full set (the paper's c3.xlarge
+disk setting); the off-memory baseline streams all n from disk per round.
+Simulated seconds = cost units / worker speed (core/simulator.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.boosting import (
+    BoosterConfig,
+    SparrowConfig,
+    SparrowWorker,
+    train_exact_greedy,
+    train_goss,
+)
+from repro.boosting.scanner import ScannerConfig
+from repro.boosting.stumps import exp_loss
+from repro.core.simulator import SimulatorConfig, TMSNSimulator, WorkerSpec
+from repro.data.splice import SpliceConfig, make_splice_like, train_test_split
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+MEM, DISK = 0.25, 1.0
+
+
+def _sparrow_curve(xtr, ytr, xte, yte, n_workers, max_events, seed=0, parallel_sampler=False):
+    cfg = SparrowConfig(
+        # paper Table 1: "TMSN, sample 10%"
+        sample_size=max(xtr.shape[0] // 10, 2048),
+        capacity=512,
+        scanner=ScannerConfig(chunk_size=512, num_bins=8, gamma0=0.25),
+        n_workers=n_workers,
+        mem_read_cost=MEM,
+        disk_read_cost=DISK,
+        parallel_sampler=parallel_sampler,
+    )
+    worker = SparrowWorker(xtr, ytr, cfg)
+    sim = TMSNSimulator(
+        worker,
+        [WorkerSpec(speed=1.0) for _ in range(n_workers)],
+        SimulatorConfig(
+            # eps=0: accept any strict improvement. A positive gap
+            # deadlocks feature-partitioned workers once per-fire deltas
+            # shrink below it (measured; EXPERIMENTS.md §Repro).
+            n_workers=n_workers, max_events=max_events, seed=seed, eps=0.0,
+            snapshot_every=max(max_events // 30, 1),
+        ),
+    )
+    res = sim.run()
+    curve = [(t, float(exp_loss(m, xte, yte))) for t, _, m in res.snapshots]
+    best = int(np.argmin(res.final_certificates))
+    curve.append((res.sim_time, float(exp_loss(res.final_models[best], xte, yte))))
+    return curve, res
+
+
+def _time_to(curve, target):
+    best = float("inf")
+    for t, loss in curve:
+        best = min(best, loss)
+        if best <= target:
+            return t
+    return float("nan")
+
+
+def run(quick: bool = False) -> list[str]:
+    lines = []
+    n = 60_000 if quick else 150_000
+    xb, y, _ = make_splice_like(SpliceConfig(n=n, d=48, num_bins=8, seed=0))
+    xtr, ytr, xte, yte = train_test_split(xb, y)
+    n_tr = xtr.shape[0]
+    eval_fn = lambda m: float(exp_loss(m, xte, yte))
+
+    rounds = 50 if quick else 90
+    bc = BoosterConfig(num_rounds=rounds, num_bins=8, eval_every=3)
+    tr_xgb = train_exact_greedy(xtr, ytr, bc, eval_fn)
+    tr_goss = train_goss(xtr, ytr, bc, eval_fn)
+
+    # in-memory baselines: all reads priced MEM; off-memory: DISK
+    xgb_mem = [(c * MEM, l) for c, l in zip(tr_xgb.cost, tr_xgb.metric)]
+    xgb_disk = [(c * DISK, l) for c, l in zip(tr_xgb.cost, tr_xgb.metric)]
+    goss_mem = [(c * MEM, l) for c, l in zip(tr_goss.cost, tr_goss.metric)]
+
+    ev = 1200 if quick else 5000
+    s1_curve, s1 = _sparrow_curve(xtr, ytr, xte, yte, 1, ev)
+    sN_curve, sN = _sparrow_curve(xtr, ytr, xte, yte, 10, ev * 4)
+    sP_curve, sP = _sparrow_curve(xtr, ytr, xte, yte, 10, ev * 4, parallel_sampler=True)
+
+    # Report time-to-loss at three levels: Sparrow leads in the early/mid
+    # regime (the paper's operating point at 50M examples, where one
+    # baseline full scan >> one certified stump); at this bench's small n
+    # the exact-greedy tail catches up — a scale effect, discussed in
+    # EXPERIMENTS.md. Sparrow's final loss sits slightly above the
+    # exact-greedy floor, faithfully reproducing the paper's own Fig. 4
+    # observation ("baffling" slightly-worse AUPRC).
+    floor = max(min(l for _, l in xgb_mem), min(l for _, l in s1_curve))
+    targets = {"early": 0.70, "mid": 0.64, "late": round(floor * 1.02, 4)}
+
+    systems = {
+        "xgboost_like_inmem": xgb_mem,
+        "xgboost_like_offmem": xgb_disk,
+        "lightgbm_like_goss_inmem": goss_mem,
+        "sparrow_1worker_disk": s1_curve,
+        "sparrow_10workers_disk": sN_curve,
+        "sparrow_10w_parallel_sampler": sP_curve,
+    }
+    target = targets["late"]
+    rows = {
+        name: (_time_to(curve, target), min(l for _, l in curve))
+        for name, curve in systems.items()
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "convergence.json"), "w") as f:
+        json.dump(
+            {
+                "target_loss": target,
+                "rows": {k: {"time": v[0], "final_loss": v[1]} for k, v in rows.items()},
+                "curves": {
+                    "xgb_mem": xgb_mem, "goss_mem": goss_mem,
+                    "sparrow_1": s1_curve, "sparrow_10": sN_curve,
+                    "sparrow_10_parallel": sP_curve,
+                },
+                "sparrow_msgs": {"sent": sN.messages_sent, "accepted": sN.messages_accepted},
+            },
+            f, indent=1, default=float,
+        )
+    for name, (t, loss) in rows.items():
+        lines.append(f"convergence.{name},{t:.0f},final_loss={loss:.4f}")
+    for lvl, tg in targets.items():
+        tx = _time_to(xgb_mem, tg)
+        ts = _time_to(sN_curve, tg)
+        if tx == tx and ts == ts:
+            lines.append(f"convergence.speedup10w_vs_xgbmem_at_{lvl},{tx / ts:.2f},loss<={tg}")
+    t_s1 = _time_to(s1_curve, targets['mid'])
+    t_sN = _time_to(sN_curve, targets['mid'])
+    if t_s1 == t_s1 and t_sN == t_sN:
+        lines.append(f"convergence.speedup_10w_vs_1w_mid,{t_s1 / t_sN:.2f},paper_claims_3.2x")
+    t_sP = _time_to(sP_curve, targets['late'])
+    t_sN2 = _time_to(sN_curve, targets['late'])
+    if t_sP == t_sP and t_sN2 == t_sN2:
+        lines.append(f"convergence.parallel_sampler_speedup,{t_sN2 / t_sP:.2f},beyond_paper")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run(quick=True):
+        print(line)

@@ -1,0 +1,61 @@
+"""Kernel micro-benchmarks. On this CPU container the Pallas kernels
+run in interpret mode (host-speed, NOT TPU-representative) — reported
+as correctness + host-overhead numbers; the TPU projection column uses
+the analytic VMEM-tile roofline from the kernel's block shapes."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.boosting.stumps import edge_histogram
+from repro.kernels import ops
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def _time(f, *args, reps=3):
+    f(*args)  # warm/compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def run(quick: bool = False) -> list[str]:
+    lines = []
+    n, d, B = (4096, 32, 8) if quick else (16384, 64, 8)
+    key = jax.random.PRNGKey(0)
+    xb = jax.random.randint(key, (n, d), 0, B, dtype=jnp.int32)
+    w = jax.random.uniform(key, (n,)) + 0.1
+    y = jnp.where(jax.random.bernoulli(key, 0.5, (n,)), 1.0, -1.0)
+    wy = w * y
+
+    t_jnp = _time(jax.jit(lambda a, b: edge_histogram(a, b, B)), xb, wy)
+    t_pallas = _time(
+        lambda a, b, c: ops.edge_scan(a, b, c, num_bins=B, interpret=True), xb, wy, w
+    )
+    lines.append(f"kernels.edge_scan_jnp_cpu,{t_jnp:.0f},us_per_call")
+    lines.append(f"kernels.edge_scan_pallas_interp,{t_pallas:.0f},us_per_call_interpret_mode")
+
+    # TPU projection: one pass reads n*d int32 bins + writes (d,B) f32;
+    # MXU work = 2*n*d*B flops per tile-contraction
+    bytes_moved = n * d * 4 + d * B * 4 + n * 8
+    flops = 2 * n * d * B
+    t_mem = bytes_moved / HBM_BW * 1e6
+    t_mxu = flops / PEAK_FLOPS_BF16 * 1e6
+    lines.append(f"kernels.edge_scan_tpu_roofline,{max(t_mem, t_mxu):.2f},us_projected_bw_bound")
+
+    a = jax.random.normal(key, (d, B - 1)) * 0.1
+    ml = jnp.zeros((n,))
+    t_wu = _time(
+        lambda: ops.weight_update(xb, y, ml, ml, a, jnp.sum(a) * 0.1, num_bins=B, interpret=True)
+    )
+    lines.append(f"kernels.weight_update_pallas_interp,{t_wu:.0f},us_per_call_interpret_mode")
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run(quick=True):
+        print(line)

@@ -1,0 +1,75 @@
+"""Render the §Roofline table from the dry-run JSON records.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--dir benchmarks/results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+MOVE_HINTS = {
+    "compute_s": "raise arithmetic intensity: fuse, larger per-chip batch, or shard less",
+    "memory_s": "cut HBM traffic: bf16 states, windowed KV caches, fused SSD mask, less remat",
+    "collective_s": "cut exchanged bytes: TMSN-SGD rounds, 1D-instead-of-2D sharding, overlap",
+}
+
+
+def load(dir_: str) -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    if r.get("status") == "skip":
+        return (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']}{' TMSN' if r.get('tmsn') else ''} | "
+            f"SKIP | — | — | — | — | {r['reason'][:60]}... |"
+        )
+    if r.get("status") != "ok":
+        return f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | — | — | — | — | {r.get('error','')[:60]} |"
+    t = r["terms"]
+    dom = r["dominant"].replace("_s", "")
+    # argument+output = resident per-device bytes (reliable); temp is the
+    # CPU backend's buffer liveness and over-states a TPU's (reported in
+    # the JSON, not gated here).
+    args_gb = r["memory"].get("argument_size_in_bytes", 0) / 1e9
+    fits = "Y" if args_gb <= 16.0 else "OVER"
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']}{' TMSN' if r.get('tmsn') else ''} | "
+        f"{t['compute_s']:.2e} | {t['memory_s']:.2e} | {t['collective_s']:.2e} | "
+        f"**{dom}** | {r['useful_ratio']:.2f} | {args_gb:.1f}GB/{fits} |"
+    )
+
+
+def render(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) | bottleneck | useful-FLOP ratio | bytes/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        lines.append(fmt_row(r))
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=DEFAULT_DIR)
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print(render(recs))
+    n_ok = sum(1 for r in recs if r.get("status") == "ok")
+    n_skip = sum(1 for r in recs if r.get("status") == "skip")
+    n_err = len(recs) - n_ok - n_skip
+    print(f"\n{n_ok} ok, {n_skip} skipped (documented), {n_err} errors")
+
+
+if __name__ == "__main__":
+    main()

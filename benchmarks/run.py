@@ -1,0 +1,62 @@
+"""Benchmark entry point — one module per paper table/figure plus the
+framework-level benches. Prints ``name,value,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+(--full runs the paper-scale sizes; default is the quick profile so the
+suite completes on the CPU container.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import bench_convergence, bench_kernels, bench_protocol, bench_stopping
+
+    benches = {
+        "stopping": bench_stopping.run,
+        "kernels": bench_kernels.run,
+        "protocol": bench_protocol.run,
+        "convergence": bench_convergence.run,
+    }
+    try:
+        from benchmarks import bench_tmsn_sgd
+
+        benches["tmsn_sgd"] = bench_tmsn_sgd.run
+    except ImportError:
+        pass
+    try:
+        from benchmarks import bench_ablations
+
+        benches["ablations"] = bench_ablations.run
+    except ImportError:
+        pass
+
+    selected = args.only.split(",") if args.only else list(benches)
+    print("name,value,derived")
+    failures = 0
+    for name in selected:
+        t0 = time.time()
+        try:
+            for line in benches[name](quick=quick):
+                print(line, flush=True)
+            print(f"bench.{name}.wall_s,{time.time()-t0:.1f},", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"bench.{name}.FAILED,{type(e).__name__},{e}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

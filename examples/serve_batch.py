@@ -1,0 +1,32 @@
+"""Batched serving example: prefill a batch of prompts through a
+reduced zoo member, re-buffer the KV caches, and decode tokens — the
+same ``prefill_step`` / ``serve_step`` the production dry-run lowers.
+
+  PYTHONPATH=src python examples/serve_batch.py [--arch gemma3-12b]
+"""
+
+import argparse
+
+from repro.configs import get_config, reduced
+from repro.launch.serve import serve
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-12b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    print(f"serving reduced {cfg.name}: batch={args.batch} "
+          f"prompt={args.prompt_len} gen={args.gen}")
+    out = serve(cfg, args.batch, args.prompt_len, args.gen)
+    print(f"prefill {out['prefill_s']:.2f}s; decode {out['decode_s']:.2f}s "
+          f"({out['tok_per_s']:.1f} tok/s)")
+    print("first request's generations:", out["generated"][0][:12], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""End-to-end LM training driver: a ~100M-parameter member of the
+yi/llama family (8 layers, d_model=768) trained for a few hundred steps
+on synthetic tokens — the full production path (config -> model ->
+optimizer -> pjit step -> checkpoint) at host scale.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--tmsn]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.data.tokens import TokenPipeline
+from repro.launch.steps import make_train_step
+from repro.models import init_params, param_count
+from repro.optim import AdamWConfig, init_opt_state
+
+
+def small_lm():
+    """~100M-param reduced member of the yi-9b (llama/GQA) family."""
+    return dataclasses.replace(
+        get_config("yi-9b"),
+        num_layers=8, d_model=768, num_heads=12, num_kv_heads=4,
+        d_ff=2048, vocab=32000, head_dim=64,
+        param_dtype="float32", compute_dtype="float32", remat=False,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--tmsn", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt.npz")
+    args = ap.parse_args()
+
+    cfg = small_lm()
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    print(f"model: {param_count(params)/1e6:.1f}M params "
+          f"({cfg.num_layers}L d={cfg.d_model})")
+    opt_cfg = AdamWConfig(lr=6e-4)
+    opt = init_opt_state(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+
+    pipe = TokenPipeline(batch=args.batch, seq=args.seq, vocab=cfg.vocab)
+    t0 = time.time()
+    first = last = None
+    for step, batch in zip(range(args.steps), pipe):
+        params, opt, metrics = step_fn(params, opt, batch)
+        loss = float(metrics["loss"])
+        first = first if first is not None else loss
+        last = loss
+        if step % 20 == 0:
+            tok_s = args.batch * args.seq * (step + 1) / (time.time() - t0)
+            print(f"step {step:4d}  loss {loss:.4f}  ({tok_s:.0f} tok/s)", flush=True)
+    print(f"loss {first:.4f} -> {last:.4f} over {args.steps} steps")
+    save_checkpoint(args.ckpt, params)
+    restored = load_checkpoint(args.ckpt, params)
+    assert all(
+        (a == b).all() for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored))
+    )
+    print(f"checkpoint round-trip OK -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Sparrow — TMSN applied to boosted decision stumps (paper §3-4) —
+plus the baselines the paper compares against (XGBoost-like exact
+greedy histograms, LightGBM-like GOSS) and a synchronous AdaBoost
+reference."""
+
+from repro.boosting.stumps import (
+    StumpModel,
+    empty_model,
+    append_stump,
+    predict_margin,
+    predict_margin_delta,
+    edge_histogram,
+    edges_from_histogram,
+    exp_loss,
+    model_payload_bytes,
+)
+from repro.boosting.scanner import ScannerConfig, ScannerState, init_scanner, scan_chunk
+from repro.boosting.sampler import minimal_variance_sample, rejection_sample
+from repro.boosting.sparrow import SparrowConfig, SparrowWorker, SparrowState
+from repro.boosting.baselines import (
+    BoosterConfig,
+    train_exact_greedy,
+    train_goss,
+    train_adaboost_reference,
+    BoostTrace,
+)
+
+__all__ = [
+    "StumpModel",
+    "empty_model",
+    "append_stump",
+    "predict_margin",
+    "predict_margin_delta",
+    "edge_histogram",
+    "edges_from_histogram",
+    "exp_loss",
+    "model_payload_bytes",
+    "ScannerConfig",
+    "ScannerState",
+    "init_scanner",
+    "scan_chunk",
+    "minimal_variance_sample",
+    "rejection_sample",
+    "SparrowConfig",
+    "SparrowWorker",
+    "SparrowState",
+    "BoosterConfig",
+    "train_exact_greedy",
+    "train_goss",
+    "train_adaboost_reference",
+    "BoostTrace",
+]

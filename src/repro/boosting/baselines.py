@@ -1,0 +1,145 @@
+"""Baselines the paper compares against, rebuilt in JAX on the same
+stump/histogram substrate so the comparison is apples-to-apples:
+
+* ``train_exact_greedy`` — XGBoost-style in-memory exact greedy: every
+  boosting iteration scans the FULL training set, builds the (feature,
+  bin) gradient histogram, and takes the best stump. (XGBoost's
+  "approximate greedy" quantile sketch == our shared pre-binning.)
+* ``train_goss`` — LightGBM-style Gradient-based One-Side Sampling:
+  keep the top-``a`` fraction by |gradient| (== AdaBoost weight), sample
+  a ``b`` fraction of the rest and up-weight it by ``(1-a)/b``; build the
+  histogram only on the subset. Gradients are still refreshed for all n
+  examples each iteration (as LightGBM does).
+* ``train_adaboost_reference`` — textbook synchronous AdaBoost with the
+  empirically-optimal alpha; correctness oracle for tests.
+
+All three share Sparrow's cost model (examples touched +
+STUMP_EVAL_COST * incremental stump evals) so "simulated seconds" are
+comparable across systems.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.boosting.sparrow import STUMP_EVAL_COST
+from repro.boosting.stumps import (
+    StumpModel,
+    alpha_from_gamma,
+    append_stump,
+    best_stump_exact,
+    empty_model,
+    predict_margin,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BoosterConfig:
+    num_rounds: int = 100
+    num_bins: int = 32
+    capacity: int = 256
+    # GOSS fractions (LightGBM defaults: a=0.2, b=0.1)
+    goss_top: float = 0.2
+    goss_rest: float = 0.1
+    seed: int = 0
+    eval_every: int = 5
+
+
+class BoostTrace(NamedTuple):
+    """(cost, metric) checkpoints for the loss-vs-time figures."""
+
+    cost: list  # cumulative cost units at each checkpoint
+    rounds: list
+    metric: list  # eval_fn(model) at each checkpoint
+    model: StumpModel
+
+
+EvalFn = Callable[[StumpModel], float]
+
+
+def _loop(
+    xb: jnp.ndarray,
+    y: jnp.ndarray,
+    cfg: BoosterConfig,
+    eval_fn: EvalFn | None,
+    step_fn: Callable[[StumpModel, jnp.ndarray, jax.Array], tuple[StumpModel, float]],
+) -> BoostTrace:
+    """Common driver: maintains margins incrementally, charges cost."""
+    n = xb.shape[0]
+    model = empty_model(cfg.capacity)
+    margin = jnp.zeros((n,), jnp.float32)
+    key = jax.random.PRNGKey(cfg.seed)
+    cost = 0.0
+    costs, rounds, metrics = [], [], []
+    for r in range(cfg.num_rounds):
+        w = jnp.exp(jnp.clip(-y * margin, -30.0, 30.0))
+        key, sub = jax.random.split(key)
+        prev_count = int(model.count)
+        model, step_cost = step_fn(model, w, sub)
+        cost += step_cost
+        if int(model.count) > prev_count:
+            # incremental margin refresh: one new stump on all n examples
+            k = prev_count
+            f, t, s, a = model.feat[k], model.thr[k], model.sign[k], model.alpha[k]
+            h = jnp.where(xb[:, f] > t, 1.0, -1.0) * s
+            margin = margin + a * h
+            cost += STUMP_EVAL_COST * n
+        if eval_fn is not None and (r % cfg.eval_every == 0 or r == cfg.num_rounds - 1):
+            costs.append(cost)
+            rounds.append(r + 1)
+            metrics.append(float(eval_fn(model)))
+    return BoostTrace(cost=costs, rounds=rounds, metric=metrics, model=model)
+
+
+def train_exact_greedy(
+    xb: jnp.ndarray, y: jnp.ndarray, cfg: BoosterConfig, eval_fn: EvalFn | None = None
+) -> BoostTrace:
+    """XGBoost-like: full-scan exact greedy per round."""
+    n = xb.shape[0]
+
+    def step(model: StumpModel, w: jnp.ndarray, key: jax.Array) -> tuple[StumpModel, float]:
+        feat, thr, sign, gamma_hat = best_stump_exact(xb, y, w, cfg.num_bins)
+        alpha = alpha_from_gamma(gamma_hat)
+        model = append_stump(model, feat, thr, sign, alpha)
+        return model, float(n)  # one full histogram pass
+
+    return _loop(xb, y, cfg, eval_fn, step)
+
+
+def train_goss(
+    xb: jnp.ndarray, y: jnp.ndarray, cfg: BoosterConfig, eval_fn: EvalFn | None = None
+) -> BoostTrace:
+    """LightGBM-like GOSS: histogram on top-a + sampled-b subset."""
+    n = xb.shape[0]
+    k_top = max(1, int(cfg.goss_top * n))
+    k_rest = max(1, int(cfg.goss_rest * n))
+    amplify = (1.0 - cfg.goss_top) / (cfg.goss_rest)
+
+    def step(model: StumpModel, w: jnp.ndarray, key: jax.Array) -> tuple[StumpModel, float]:
+        order = jnp.argsort(-w)
+        top = order[:k_top]
+        rest_pool = order[k_top:]
+        pick = jax.random.choice(key, rest_pool, shape=(k_rest,), replace=False)
+        idx = jnp.concatenate([top, pick])
+        w_sub = jnp.concatenate([w[top], w[pick] * amplify])
+        feat, thr, sign, gamma_hat = best_stump_exact(
+            xb[idx], y[idx], w_sub, cfg.num_bins
+        )
+        alpha = alpha_from_gamma(gamma_hat)
+        model = append_stump(model, feat, thr, sign, alpha)
+        # gradients refreshed for all n (cheap pass) + histogram on subset
+        return model, float(k_top + k_rest) + 0.2 * n
+
+    return _loop(xb, y, cfg, eval_fn, step)
+
+
+def train_adaboost_reference(
+    xb: jnp.ndarray, y: jnp.ndarray, cfg: BoosterConfig, eval_fn: EvalFn | None = None
+) -> BoostTrace:
+    """Textbook AdaBoost (the correctness oracle; same as exact greedy
+    here since both use the empirically best stump + optimal alpha)."""
+    return train_exact_greedy(xb, y, cfg, eval_fn)

@@ -1,0 +1,47 @@
+"""Minimal npz checkpointing: flattens any pytree (dicts / lists /
+tuples / NamedTuples) with stable path keys. Suitable for the example
+drivers and tests; a production deployment would swap in a
+multi-host-aware store behind the same two calls."""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(path: str, tree: Any) -> None:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {_path_str(kp): np.asarray(v) for kp, v in flat}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, tree = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for kp, v in flat:
+        key = _path_str(kp)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(v.shape):
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {v.shape}")
+        out.append(jax.numpy.asarray(arr, dtype=v.dtype))
+    return jax.tree_util.tree_unflatten(tree, out)

@@ -1,0 +1,16 @@
+"""The paper's own system config: Sparrow on the splice-site analogue."""
+
+from repro.boosting.scanner import ScannerConfig
+from repro.boosting.sparrow import SparrowConfig
+from repro.data.splice import SpliceConfig
+
+DATA = SpliceConfig(n=200_000, d=64, num_bins=8, seed=0)
+
+def sparrow_config(n_workers: int = 10, sample_frac: float = 0.1) -> SparrowConfig:
+    return SparrowConfig(
+        sample_size=int(DATA.n * sample_frac * 0.9),  # 10% of train split
+        capacity=256,
+        scanner=ScannerConfig(chunk_size=2048, num_bins=DATA.num_bins, gamma0=0.25),
+        ess_threshold=0.1,
+        n_workers=n_workers,
+    )

@@ -1,0 +1,36 @@
+"""TMSN core: certificates, stopping rules, protocol, async simulator.
+
+The paper's first contribution is the *protocol*: independent workers,
+each holding a (model, certificate) pair, broadcasting only when the
+certificate improves by more than a gap ``eps`` and accepting incoming
+pairs only when they beat the local certificate by ``eps``.
+"""
+
+from repro.core.ess import effective_sample_size
+from repro.core.stopping import (
+    StoppingRuleParams,
+    stopping_rule_fires,
+    stopping_threshold,
+)
+from repro.core.protocol import Certificate, TMSNMessage, accepts, improves
+from repro.core.simulator import (
+    SimulatorConfig,
+    WorkerSpec,
+    TMSNSimulator,
+    SimResult,
+)
+
+__all__ = [
+    "effective_sample_size",
+    "StoppingRuleParams",
+    "stopping_rule_fires",
+    "stopping_threshold",
+    "Certificate",
+    "TMSNMessage",
+    "accepts",
+    "improves",
+    "SimulatorConfig",
+    "WorkerSpec",
+    "TMSNSimulator",
+    "SimResult",
+]

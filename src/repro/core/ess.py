@@ -1,0 +1,39 @@
+"""Effective sample size for weighted samples (paper Eq. 4).
+
+``n_eff = (sum w)^2 / sum(w^2)``.
+
+As boosting progresses the weights of the in-memory sample become
+skewed, the effective sample size shrinks, and the stopping rule needs
+ever more raw examples to certify an edge. When ``n_eff / m`` falls
+below a threshold the Sampler draws a fresh uniform-weight sample.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def effective_sample_size(w: jnp.ndarray, mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Effective number of examples of an (un-normalized) weight vector.
+
+    Args:
+        w: weights, any shape (flattened internally); need not be normalized.
+        mask: optional boolean/0-1 mask of live entries (same shape as ``w``).
+
+    Returns:
+        scalar ``(sum w)^2 / sum w^2``; 0 when all weights are 0.
+    """
+    w = jnp.asarray(w, dtype=jnp.float32).ravel()
+    if mask is not None:
+        w = w * jnp.asarray(mask, dtype=jnp.float32).ravel()
+    s1 = jnp.sum(w)
+    s2 = jnp.sum(w * w)
+    return jnp.where(s2 > 0, (s1 * s1) / jnp.maximum(s2, 1e-30), 0.0)
+
+
+def expected_sample_fraction(w: jnp.ndarray) -> jnp.ndarray:
+    """Paper §3, last paragraph: expected fraction of examples selected by
+    selective sampling with acceptance probability proportional to ``w``:
+    ``mean(w) / max(w)``."""
+    w = jnp.asarray(w, dtype=jnp.float32).ravel()
+    return jnp.where(w.size > 0, jnp.mean(w) / jnp.maximum(jnp.max(w), 1e-30), 0.0)

@@ -1,0 +1,66 @@
+"""The TMSN protocol proper (paper §2, §4.2).
+
+A *certificate* is a sound high-probability bound on the quality of a
+model: for Sparrow it is the performance score ``z`` (an upper bound on
+the loss potential Z of the strong rule); for TMSN-SGD it is a loss EMA
+plus a concentration width. TMSN's correctness needs only soundness of
+certificates; its speed needs tightness.
+
+Protocol rules (eps = the "gap"):
+
+  * ``improves(old, new, eps)`` — a worker broadcasts iff its own new
+    certificate beats its previous one by more than eps.
+  * ``accepts(local, incoming, eps)`` — a worker adopts an incoming pair
+    iff the incoming certificate beats the local one by more than eps;
+    otherwise the message is discarded.
+
+Both are pure and jit-safe so the SPMD mapping can reuse them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Generic, TypeVar
+
+import jax.numpy as jnp
+
+ModelT = TypeVar("ModelT")
+
+
+@dataclasses.dataclass(frozen=True)
+class Certificate:
+    """A sound upper bound on the loss of a model.
+
+    ``value`` is the bound itself (lower is better). ``confidence`` is
+    1 - sigma for bookkeeping/diagnostics only — the protocol never
+    branches on it.
+    """
+
+    value: float
+    confidence: float = 1.0
+
+    def __post_init__(self) -> None:
+        if not (0.0 <= self.confidence <= 1.0):
+            raise ValueError(f"confidence must be in [0,1], got {self.confidence}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TMSNMessage(Generic[ModelT]):
+    """The broadcast payload ``(H, L)``: a model and its certificate."""
+
+    model: ModelT
+    certificate: Certificate
+    sender: int
+    seq: int = 0  # sender-local sequence number, for tracing only
+    payload_bytes: int = 0  # for the communication-cost accounting
+
+
+def improves(old: float | jnp.ndarray, new: float | jnp.ndarray, eps: float) -> Any:
+    """Does ``new`` improve on ``old`` by more than the gap? (broadcast test)"""
+    return new < old - eps
+
+
+def accepts(local: float | jnp.ndarray, incoming: float | jnp.ndarray, eps: float) -> Any:
+    """Does an incoming certificate beat the local one by more than the
+    gap? (accept/reject test — paper §4.2: accept iff ``z_t < z``)."""
+    return incoming < local - eps

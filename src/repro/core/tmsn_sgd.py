@@ -1,0 +1,136 @@
+"""TMSN-SGD: the paper's protocol as a distributed *training strategy*
+for the transformer zoo (DESIGN.md §3, fidelity level 3).
+
+Mapping of the paper's concepts onto SPMD/TPU:
+
+  worker            -> a worker *group*: a slice of the mesh along the
+                       worker axis ("data" single-pod, "pod" multi-pod)
+  independent search-> K local optimizer steps on the group's own batch
+                       shard (no gradient all-reduce across groups)
+  certificate L     -> EMA of training loss + a concentration width
+                       (std of the K step losses / sqrt(K); the honest
+                       analogue of the paper's bound — DESIGN.md notes
+                       that a training-loss EMA is an estimator, not a
+                       sound bound)
+  broadcast (H,L)   -> one conditional one-hot parameter exchange per
+                       round: the argmin-certificate group's params are
+                       gathered (XLA lowers the dynamic index over the
+                       worker-sharded axis to a collective) and adopted
+                       only by groups whose certificate it beats by eps
+  accept/reject     -> repro.core.protocol.accepts, unchanged
+
+Collective cost per round: ONE parameter broadcast over the worker axis
+instead of K gradient all-reduces — this is precisely the paper's
+"communicate only when you have something new" applied to SGD, and it
+attacks the collective roofline term (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import loss_fn
+from repro.optim import AdamWConfig, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class TMSNSGDConfig:
+    num_workers: int = 16  # W — size of the worker mesh axis
+    local_steps: int = 8  # K — steps between exchange opportunities
+    eps: float = 0.0  # protocol gap on the certificate
+    ema: float = 0.9
+    width_coef: float = 1.0  # certificate confidence-width multiplier
+    unroll: bool = False  # unroll the K-step scan (dry-run cost analysis)
+
+
+def make_tmsn_round(
+    cfg: ArchConfig, opt_cfg: AdamWConfig, tcfg: TMSNSGDConfig
+) -> Callable:
+    """Returns round(params_w, opt_w, cert_w, batch_w) — all carrying a
+    leading W (worker) axis; batch_w leaves are (W, K, local_batch, ...)."""
+
+    def per_worker(params, opt_state, batches):
+        def one_step(carry, batch):
+            p, o = carry
+
+            def loss_only(pp):
+                loss, metrics = loss_fn(pp, cfg, batch)
+                return loss, metrics
+
+            (loss, _metrics), grads = jax.value_and_grad(loss_only, has_aux=True)(p)
+            p, o = apply_updates(p, grads, o, opt_cfg)
+            return (p, o), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            one_step, (params, opt_state), batches,
+            unroll=tcfg.local_steps if tcfg.unroll else 1,
+        )
+        return params, opt_state, losses
+
+    def tmsn_round(params_w, opt_w, cert_w, batch_w):
+        params_w, opt_w, losses_w = jax.vmap(per_worker)(params_w, opt_w, batch_w)
+        # certificate: loss EMA + concentration width over the K steps
+        mean_w = jnp.mean(losses_w, axis=1)
+        width = tcfg.width_coef * jnp.std(losses_w, axis=1) / jnp.sqrt(
+            jnp.asarray(tcfg.local_steps, jnp.float32)
+        )
+        cert_new = tcfg.ema * cert_w + (1.0 - tcfg.ema) * (mean_w + width)
+
+        best = jnp.argmin(cert_new)
+        best_cert = cert_new[best]
+        # accept/reject per worker (repro.core.protocol.accepts, inlined
+        # for jit: strict improvement by more than eps)
+        adopt = best_cert < cert_new - tcfg.eps  # (W,) bool
+
+        def adopt_leaf(a):
+            winner = jax.lax.dynamic_index_in_dim(a, best, 0, keepdims=True)
+            mask = adopt.reshape((-1,) + (1,) * (a.ndim - 1))
+            return jnp.where(mask, jnp.broadcast_to(winner, a.shape), a)
+
+        params_w = jax.tree.map(adopt_leaf, params_w)
+        opt_w = jax.tree.map(adopt_leaf, opt_w)
+        cert_w = jnp.where(adopt, best_cert, cert_new)
+        return params_w, opt_w, cert_w, jnp.mean(losses_w)
+
+    return tmsn_round
+
+
+def init_tmsn_state(
+    cfg: ArchConfig, opt_cfg: AdamWConfig, tcfg: TMSNSGDConfig, key: jax.Array
+) -> tuple[Any, Any, jnp.ndarray]:
+    """(params_w, opt_w, cert_w) with the leading W axis. Workers start
+    from the SAME initial model (paper §2: all workers start from H_0);
+    divergence comes from their independent batch shards."""
+    from repro.models import init_params
+    from repro.optim import init_opt_state
+
+    params = init_params(cfg, key)
+    opt = init_opt_state(params, opt_cfg)
+    W = tcfg.num_workers
+    params_w = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (W,) + a.shape), params)
+    opt_w = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (W,) + a.shape), opt)
+    cert_w = jnp.full((W,), jnp.inf, jnp.float32)
+    # inf EMA poisons the update; start from a large finite sentinel
+    cert_w = jnp.full((W,), 1e9, jnp.float32)
+    return params_w, opt_w, cert_w
+
+
+def tmsn_batch_specs(cfg: ArchConfig, tcfg: TMSNSGDConfig, seq: int, global_batch: int):
+    """ShapeDtypeStructs for one round's batches: (W, K, b_local, ...)."""
+    W, K = tcfg.num_workers, tcfg.local_steps
+    b_local = max(global_batch // W, 1)
+    spec = {
+        "tokens": jax.ShapeDtypeStruct((W, K, b_local, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((W, K, b_local, seq), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((W, K, b_local, seq), jnp.float32),
+    }
+    if cfg.frontend is not None:
+        spec["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (W, K, b_local, cfg.frontend_len, cfg.frontend_dim), jnp.float32
+        )
+    return spec

@@ -1,0 +1,8 @@
+"""Data pipelines: synthetic splice-site-like generator for the
+boosting experiments, and the token/embedding pipelines for the
+transformer zoo."""
+
+from repro.data.splice import make_splice_like, SpliceConfig
+from repro.data.tokens import synthetic_token_batch, TokenPipeline
+
+__all__ = ["make_splice_like", "SpliceConfig", "synthetic_token_batch", "TokenPipeline"]

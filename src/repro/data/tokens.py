@@ -1,0 +1,72 @@
+"""Synthetic token / embedding pipeline for the transformer zoo.
+
+Provides deterministic synthetic batches for smoke tests and the
+training examples, plus ``ShapeDtypeStruct`` specs for the dry-run (the
+dry-run never allocates real data). Modality frontends (audio conv
+codec, ViT patch encoder) are stubs per the assignment: ``TokenPipeline``
+emits precomputed frame/patch embeddings of the right shape for those
+architectures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def synthetic_token_batch(
+    key: jax.Array, batch: int, seq: int, vocab: int
+) -> dict[str, jnp.ndarray]:
+    """One LM batch: tokens + next-token labels (shifted) + mask."""
+    tokens = jax.random.randint(key, (batch, seq), 0, vocab, dtype=jnp.int32)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.ones((batch, seq), jnp.float32)
+    return {"tokens": tokens, "labels": labels, "mask": mask}
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    """Host-side infinite batch iterator with a fixed RNG lineage.
+
+    Real deployments swap this for a file-backed loader; the interface
+    (``__iter__`` of dict batches, ``element_spec``) is what the trainer
+    depends on.
+    """
+
+    batch: int
+    seq: int
+    vocab: int
+    seed: int = 0
+    # modality stub: if set, also emit (batch, frontend_len, frontend_dim)
+    # float embeddings (audio frames / vision patches)
+    frontend_len: int = 0
+    frontend_dim: int = 0
+
+    def element_spec(self) -> dict[str, jax.ShapeDtypeStruct]:
+        spec = {
+            "tokens": jax.ShapeDtypeStruct((self.batch, self.seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((self.batch, self.seq), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((self.batch, self.seq), jnp.float32),
+        }
+        if self.frontend_len:
+            spec["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (self.batch, self.frontend_len, self.frontend_dim), jnp.float32
+            )
+        return spec
+
+    def __iter__(self) -> Iterator[dict[str, jnp.ndarray]]:
+        key = jax.random.PRNGKey(self.seed)
+        while True:
+            key, sub = jax.random.split(key)
+            b = synthetic_token_batch(sub, self.batch, self.seq, self.vocab)
+            if self.frontend_len:
+                key, sub2 = jax.random.split(key)
+                b["frontend_embeds"] = (
+                    jax.random.normal(sub2, (self.batch, self.frontend_len, self.frontend_dim))
+                    * 0.02
+                ).astype(jnp.float32)
+            yield b

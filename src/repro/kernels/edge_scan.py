@@ -1,0 +1,111 @@
+"""Pallas TPU kernel for the Scanner's hot loop (paper §4.1).
+
+The paper measures "computing the predictions of the strong rules" /
+accumulating candidate edges as the dominant compute cost. On CPU
+Sparrow does a scalar scatter per example; a mechanical port of that
+scatter would be hostile to the TPU (no efficient scatter in VMEM).
+
+TPU adaptation (DESIGN.md §3): recast the histogram scatter as a
+*one-hot matmul* so the MXU does the accumulation —
+
+    hist[j, b]  =  sum_i wy_i * [xb[i, j] == b]
+               =  (wy^T @ P)[j, b],   P[i, (j,b)] = [xb[i,j] == b]
+
+Each grid step loads one (tile_n, d) block of binned features into
+VMEM, builds the one-hot P on the VPU, and contracts against the
+weight vector on the MXU, accumulating into a resident (d, B) output
+block. The stopping-rule scalars (W = sum|w|, V = sum w^2, T = sum wy)
+ride along in the same pass, so one sweep over the tile produces
+everything the stopping rule needs — the paper's "one scan" structure,
+VMEM-tiled.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _edge_scan_kernel(xb_ref, wy_ref, w_ref, hist_ref, scal_ref, *, num_bins: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+        scal_ref[...] = jnp.zeros_like(scal_ref)
+
+    xb = xb_ref[...]  # (tn, d) int32
+    wy = wy_ref[...]  # (tn, 1) f32 (zero on padded rows)
+    w = w_ref[...]  # (tn, 1) f32
+
+    tn, d = xb.shape
+    bins = jax.lax.broadcasted_iota(jnp.int32, (tn, d, num_bins), 2)
+    p = (xb[:, :, None] == bins).astype(jnp.float32)  # one-hot (tn, d, B)
+    p2 = p.reshape(tn, d * num_bins)
+    # (1, tn) @ (tn, d*B) on the MXU, f32 accumulate
+    g = jnp.dot(wy.reshape(1, tn), p2, preferred_element_type=jnp.float32)
+    hist_ref[...] += g.reshape(d, num_bins)
+
+    scal_ref[0, 0] += jnp.sum(jnp.abs(w))
+    scal_ref[0, 1] += jnp.sum(w * w)
+    scal_ref[0, 2] += jnp.sum(wy)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_bins", "tile_n", "interpret")
+)
+def edge_scan(
+    xb: jnp.ndarray,
+    wy: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    num_bins: int,
+    tile_n: int = 512,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Accumulate the (feature, bin) wy-histogram + stopping-rule scalars.
+
+    Args:
+        xb: (n, d) int32 binned features.
+        wy: (n,) f32 signed weights ``w_i * y_i``.
+        w:  (n,) f32 weights.
+        num_bins: B (static).
+        tile_n: rows per grid step (VMEM tile height).
+        interpret: run the kernel body in interpret mode (CPU container);
+            on a real TPU pass False.
+
+    Returns:
+        (hist (d, B) f32, W (), V (), T ()).
+    """
+    n, d = xb.shape
+    n_pad = -n % tile_n
+    if n_pad:
+        xb = jnp.pad(xb, ((0, n_pad), (0, 0)))
+        wy = jnp.pad(wy, (0, n_pad))
+        w = jnp.pad(w, (0, n_pad))
+    steps = xb.shape[0] // tile_n
+    wy2 = wy.reshape(-1, 1)
+    w2 = w.reshape(-1, 1)
+
+    hist, scal = pl.pallas_call(
+        functools.partial(_edge_scan_kernel, num_bins=num_bins),
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d, num_bins), lambda i: (0, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, num_bins), jnp.float32),
+            jax.ShapeDtypeStruct((1, 4), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb, wy2, w2)
+    return hist, scal[0, 0], scal[0, 1], scal[0, 2]

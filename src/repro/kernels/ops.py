@@ -1,0 +1,60 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode; on a real
+TPU deployment ``interpret`` resolves to False and the same call sites
+get the compiled Mosaic kernels. Tile sizes default to MXU-aligned
+values (the second-minor dim of every matmul operand is a multiple of
+128 when d*B is — configs pick d and B accordingly; see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.edge_scan import edge_scan as _edge_scan
+from repro.kernels.weight_update import scatter_model_slice, weight_update as _weight_update
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def edge_scan(
+    xb: jnp.ndarray,
+    wy: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    num_bins: int,
+    tile_n: int = 512,
+    interpret: bool | None = None,
+):
+    """(hist (d,B), W, V, T) — see :mod:`repro.kernels.edge_scan`."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _edge_scan(xb, wy, w, num_bins=num_bins, tile_n=tile_n, interpret=interpret)
+
+
+def weight_update(
+    xb: jnp.ndarray,
+    y: jnp.ndarray,
+    margin_l: jnp.ndarray,
+    margin_s: jnp.ndarray,
+    a: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    num_bins: int,
+    tile_n: int = 512,
+    interpret: bool | None = None,
+):
+    """(margin_new, w) — see :mod:`repro.kernels.weight_update`."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _weight_update(
+        xb, y, margin_l, margin_s, a, c, num_bins=num_bins, tile_n=tile_n, interpret=interpret
+    )
+
+
+__all__ = ["edge_scan", "weight_update", "scatter_model_slice"]

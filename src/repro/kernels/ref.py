@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+``tests/test_kernels.py`` sweeps shapes/dtypes and asserts the kernels
+(interpret mode on CPU) match these to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.boosting.stumps import StumpModel, edge_histogram
+
+
+def edge_scan_ref(
+    xb: jnp.ndarray, wy: jnp.ndarray, w: jnp.ndarray, num_bins: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for :func:`repro.kernels.edge_scan.edge_scan`."""
+    hist = edge_histogram(xb, wy.astype(jnp.float32), num_bins)
+    W = jnp.sum(jnp.abs(w)).astype(jnp.float32)
+    V = jnp.sum(w * w).astype(jnp.float32)
+    T = jnp.sum(wy).astype(jnp.float32)
+    return hist, W, V, T
+
+
+def weight_update_ref(
+    xb: jnp.ndarray,
+    y: jnp.ndarray,
+    margin_l: jnp.ndarray,
+    margin_s: jnp.ndarray,
+    a: jnp.ndarray,
+    c: jnp.ndarray,
+    num_bins: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for :func:`repro.kernels.weight_update.weight_update`."""
+    num_cuts = num_bins - 1
+    cuts = jnp.arange(num_cuts)
+    p = (xb[:, :, None] > cuts[None, None, :]).astype(jnp.float32)
+    delta = 2.0 * jnp.einsum("ndc,dc->n", p, a) - c
+    m_new = margin_l + delta
+    w = jnp.exp(jnp.clip(-y * (m_new - margin_s), -30.0, 30.0))
+    return m_new, w
+
+
+def margin_delta_oracle(
+    model: StumpModel, xb: jnp.ndarray, t_lo: int, t_hi: int
+) -> jnp.ndarray:
+    """Direct stump-by-stump margin delta over slots [t_lo, t_hi) — used
+    to validate ``scatter_model_slice`` + the kernel against the model
+    semantics in ``repro.boosting.stumps``."""
+    out = jnp.zeros((xb.shape[0],), jnp.float32)
+    for k in range(t_lo, t_hi):
+        h = jnp.where(xb[:, model.feat[k]] > model.thr[k], 1.0, -1.0) * model.sign[k]
+        out = out + model.alpha[k] * h
+    return out

@@ -1,0 +1,2 @@
+"""Distribution + launch: production mesh, sharding policy, pjit step
+functions, multi-pod dry-run driver, trainer and server entry points."""

@@ -1,0 +1,392 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape x mesh) combination:
+``jax.jit(step).lower(**input_specs).compile()`` against the production
+mesh, then extract
+
+  * ``compiled.memory_analysis()``  — bytes per device (fits-or-not),
+  * ``compiled.cost_analysis()``    — HLO FLOPs / bytes for §Roofline,
+  * collective bytes parsed from the optimized per-partition HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute output sizes),
+
+and emit a JSON record consumed by benchmarks/roofline.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multipod] [--tmsn]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    data_axes,
+    make_production_mesh,
+)
+from repro.launch.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    fit_sharding_tree,
+    fit_spec,
+    opt_pspecs,
+    param_pspecs,
+)
+from repro.launch.steps import (
+    INPUT_SHAPES,
+    batch_specs,
+    decode_specs,
+    dryrun_cfg,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    opt_config_for,
+    shape_applicable,
+)
+from repro.models import init_cache, init_params
+from repro.models.config import ArchConfig
+from repro.optim import init_opt_state
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks", "results", "dryrun")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes of every collective op in the optimized
+    per-partition HLO. ``-start`` variants counted, ``-done`` skipped
+    (they share the same buffer)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        lhs, rhs = s.split(" = ", 1)
+        for coll in _COLLECTIVES:
+            # match `opcode(` or `opcode-start(` at the beginning of rhs
+            head = rhs.split("(", 1)[0].strip()
+            # strip the shape prefix from rhs head: "bf16[...] all-reduce"
+            opname = head.split()[-1] if head else ""
+            if opname in (coll, coll + "-start"):
+                out[coll] += _shape_bytes(rhs.split("(", 1)[0])
+                break
+    return out
+
+
+def active_param_fraction(cfg: ArchConfig) -> float:
+    """Fraction of parameters active per token (MoE top-k)."""
+    if not cfg.num_experts:
+        return 1.0
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    tot = sum(int(np.prod(x.shape)) for _, x in flat)
+    expert = sum(
+        int(np.prod(x.shape))
+        for kp, x in flat
+        if any(getattr(p, "key", None) == "moe" for p in kp)
+        and str(kp[-1].key) in ("gate", "up", "down")
+    )
+    frac_active = cfg.num_experts_per_tok / cfg.num_experts
+    return (tot - expert + expert * frac_active) / tot
+
+
+def build_case(cfg: ArchConfig, shape_name: str, mesh):
+    """Returns (jitted_fn, arg_shapes) ready for .lower()."""
+    seq, gb, kind = INPUT_SHAPES[shape_name]
+    dp = data_axes(mesh)
+    params_shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    mode = "train" if kind == "train" else "serve"
+    p_specs = param_pspecs(params_shapes, cfg, mode=mode)
+    p_sh = fit_sharding_tree(mesh, p_specs, params_shapes)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    if kind == "train":
+        opt_cfg = opt_config_for(cfg)
+        opt_shapes = jax.eval_shape(lambda: init_opt_state(params_shapes, opt_cfg))
+        o_specs = opt_pspecs(p_specs)
+        o_sh = fit_sharding_tree(mesh, o_specs, opt_shapes)
+        b_shapes = batch_specs(cfg, shape_name)
+        b_sh = fit_sharding_tree(mesh, batch_pspecs(b_shapes, dp), b_shapes)
+        fn = jax.jit(
+            make_train_step(cfg, opt_cfg),
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        )
+        return fn, (params_shapes, opt_shapes, b_shapes)
+
+    if kind == "prefill":
+        b_shapes = batch_specs(cfg, shape_name)
+        b_sh = fit_sharding_tree(mesh, batch_pspecs(b_shapes, dp), b_shapes)
+        fn = jax.jit(
+            make_prefill_step(cfg),
+            in_shardings=(p_sh, b_sh),
+        )
+        return fn, (params_shapes, b_shapes)
+
+    # decode
+    d = decode_specs(cfg, shape_name)
+    long_ctx = gb == 1
+    c_sh = fit_sharding_tree(
+        mesh, cache_pspecs(d["caches"], cfg, dp, long_context=long_ctx), d["caches"]
+    )
+    tok_spec = fit_spec(P(dp, None) if not long_ctx else P(None, None), (gb, 1), axis_sizes)
+    tok_sh = NamedSharding(mesh, tok_spec)
+    fn = jax.jit(
+        make_serve_step(cfg),
+        in_shardings=(p_sh, tok_sh, c_sh, NamedSharding(mesh, P())),
+        out_shardings=(tok_sh, c_sh),
+        donate_argnums=(2,),
+    )
+    return fn, (params_shapes, d["token"], d["caches"], d["pos"])
+
+
+def build_tmsn_case(cfg: ArchConfig, shape_name: str, mesh):
+    """Lower one TMSN-SGD round (beyond-paper training strategy)."""
+    from repro.core.tmsn_sgd import TMSNSGDConfig, make_tmsn_round, tmsn_batch_specs
+
+    seq, gb, kind = INPUT_SHAPES[shape_name]
+    assert kind == "train"
+    multi = "pod" in mesh.axis_names
+    w_axis = "pod" if multi else "data"
+    W = dict(zip(mesh.axis_names, mesh.devices.shape))[w_axis]
+    tcfg = TMSNSGDConfig(num_workers=W, local_steps=4, unroll=cfg.scan_unroll)
+    opt_cfg = opt_config_for(cfg)
+
+    params_shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    base = param_pspecs(params_shapes, cfg)
+
+    def lift(spec: P) -> P:
+        parts = tuple(spec)
+        if not multi:
+            # single pod: the worker axis consumes "data" (no FSDP within
+            # a group; params sharded over "model" only)
+            parts = tuple(None if p == "data" else p for p in parts)
+        return P(w_axis, *parts)
+
+    pw_specs = jax.tree.map(lift, base, is_leaf=lambda x: isinstance(x, P))
+    ow_specs = {"mu": pw_specs, "nu": pw_specs, "step": P(w_axis)}
+    b_shapes = tmsn_batch_specs(cfg, tcfg, seq, gb)
+    b_specs = jax.tree.map(lambda s: P(w_axis, *((None,) * (len(s.shape) - 1))), b_shapes)
+
+    pw_shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((W,) + s.shape, s.dtype), params_shapes
+    )
+    opt_cfg_dt = jnp.bfloat16 if opt_cfg.state_dtype == "bfloat16" else jnp.float32
+    ow_shapes = {
+        "mu": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, opt_cfg_dt), pw_shapes),
+        "nu": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, opt_cfg_dt), pw_shapes),
+        "step": jax.ShapeDtypeStruct((W,), jnp.int32),
+    }
+    cert_shape = jax.ShapeDtypeStruct((W,), jnp.float32)
+
+    pw_sh = fit_sharding_tree(mesh, pw_specs, pw_shapes)
+    ow_sh = fit_sharding_tree(mesh, ow_specs, ow_shapes)
+    b_sh = fit_sharding_tree(mesh, b_specs, b_shapes)
+    fn = jax.jit(
+        make_tmsn_round(cfg, opt_cfg, tcfg),
+        in_shardings=(pw_sh, ow_sh, NamedSharding(mesh, P(w_axis)), b_sh),
+        out_shardings=(pw_sh, ow_sh, NamedSharding(mesh, P(w_axis)), None),
+        donate_argnums=(0, 1),
+    )
+    return fn, (pw_shapes, ow_shapes, cert_shape, b_shapes), tcfg
+
+
+OPT_KNOBS_DOC = '''--opt applies the §Perf optimized configuration:
+  * act_dp: with_sharding_constraint on the layer-scan carry (keeps the
+    batch dim sharded inside while bodies),
+  * vocab_pad_multiple=256: pad embed/lm_head so the vocab dim shards
+    over the 16-way model axis (exact-CE masking on padded columns),
+  * ssm_chunk=64 (SSM archs): 4x smaller SSD decay-mask temporaries.'''
+
+
+def optimize_cfg(cfg: ArchConfig, mesh) -> ArchConfig:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    kw = dict(act_dp=dp, vocab_pad_multiple=256, windowed_cache=True)
+    if cfg.ssm_state:
+        kw["ssm_chunk"] = 64
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, tmsn: bool = False, opt: bool = False) -> dict:
+    cfg0 = get_config(arch)
+    cfg = dryrun_cfg(cfg0)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if opt:
+        cfg = optimize_cfg(cfg, mesh)
+    n_chips = int(np.prod(mesh.devices.shape))
+    rec: dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": n_chips,
+        "tmsn": tmsn,
+        "opt": opt,
+    }
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        rec.update(status="skip", reason=why)
+        return rec
+    try:
+        t0 = time.time()
+        if tmsn:
+            fn, arg_shapes, _ = build_tmsn_case(cfg, shape_name, mesh)
+        else:
+            fn, arg_shapes = build_case(cfg, shape_name, mesh)
+        with mesh:
+            lowered = fn.lower(*arg_shapes)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+        rec["lower_s"] = round(t_lower, 1)
+        rec["compile_s"] = round(t_compile, 1)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["raw_hlo"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "note": "XLA counts scan bodies once; analytic+trip-count models used below",
+        }
+        # collectives: exact, from the per-partition HLO with while
+        # trip-count weighting (hlo_analysis.py)
+        from repro.launch.hlo_analysis import parse_collectives
+
+        coll = parse_collectives(compiled.as_text())
+        rec["collective_bytes"] = coll
+        total_coll = float(sum(coll.values()))
+
+        # compute/memory: first-principles model (launch/analytic.py)
+        from repro.launch.analytic import step_counts
+
+        shapes_p = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+        n_params_total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes_p))
+        ana = step_counts(cfg, INPUT_SHAPES[shape_name], n_params_total)
+        if tmsn:
+            from repro.core.tmsn_sgd import TMSNSGDConfig
+
+            # one TMSN round = K local steps per worker group
+            ana = {k: v * 4 for k, v in ana.items()}  # local_steps=4
+        rec["analytic"] = ana
+        flops = ana["flops"]
+        bytes_accessed = ana["weight_bytes"] + ana["act_bytes"] + ana["cache_bytes"]
+        rec["hlo_flops"] = flops
+        rec["hlo_bytes"] = bytes_accessed
+
+        # roofline terms (per device, seconds)
+        compute_t = flops / n_chips / PEAK_FLOPS_BF16
+        memory_t = bytes_accessed / n_chips / HBM_BW
+        coll_t = total_coll / ICI_BW
+        rec["terms"] = {
+            "compute_s": compute_t,
+            "memory_s": memory_t,
+            "collective_s": coll_t,
+        }
+        rec["dominant"] = max(rec["terms"], key=rec["terms"].get)
+
+        # useful-FLOPs ratio
+        seq, gb, kind = INPUT_SHAPES[shape_name]
+        n_params = n_params_total
+        n_active = n_params * active_param_fraction(cfg)
+        tokens = gb * seq if kind != "decode" else gb
+        mult = 6 if kind == "train" else 2
+        model_flops = mult * n_active * tokens
+        rec["model_flops"] = model_flops
+        rec["useful_ratio"] = model_flops / max(flops, 1.0)
+        rec["params_b"] = n_params / 1e9
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--tmsn", action="store_true", help="lower the TMSN-SGD round (train shapes)")
+    ap.add_argument("--opt", action="store_true", help="apply the §Perf optimized config")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    out_dir = args.out or os.path.abspath(RESULTS_DIR)
+    os.makedirs(out_dir, exist_ok=True)
+
+    for arch in archs:
+        for shape in shapes:
+            if args.tmsn and INPUT_SHAPES[shape][2] != "train":
+                continue
+            rec = run_one(arch, shape, args.multipod, tmsn=args.tmsn, opt=args.opt)
+            tag = (f"{arch}_{shape}_{rec['mesh']}" + ("_tmsn" if args.tmsn else "")
+                   + ("_opt" if args.opt else ""))
+            path = os.path.join(out_dir, tag + ".json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            stat = rec["status"]
+            extra = rec.get("reason", rec.get("error", ""))[:90]
+            terms = rec.get("terms")
+            tstr = (
+                f"c={terms['compute_s']:.3e} m={terms['memory_s']:.3e} "
+                f"x={terms['collective_s']:.3e} dom={rec['dominant']}"
+                if terms
+                else ""
+            )
+            print(f"[{stat:5s}] {tag:55s} {tstr} {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

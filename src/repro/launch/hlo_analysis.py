@@ -1,0 +1,111 @@
+"""Exact collective accounting from optimized per-partition HLO.
+
+XLA's ``cost_analysis()`` counts a while-loop (scan) body ONCE, not by
+trip count, so any layer-scanned program under-reports by ~L x. The
+optimized HLO, however, annotates every while op with
+``known_trip_count`` — so we parse the module into computations, build
+the while/call nesting graph, and multiply each computation's
+collective bytes by the product of its enclosing trip counts. This
+gives exact per-device collective traffic for §Roofline.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]"
+)
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-_]+)\s*\([^)]*\)\s*->")
+_WHILE_RE = re.compile(r"while\(.*?\).*?body=%?([\w.\-_]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_CALL_RE = re.compile(r"\b(?:call|fusion)\(.*?\).*?(?:to_apply|calls)=%?([\w.\-_]+)")
+_COND_RE = re.compile(r"conditional\(.*")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict[str, float]:
+    """Per-collective-kind bytes, weighted by loop trip counts."""
+    # 1. split into computations
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" "):
+            m = _COMP_HDR.match(line.strip())
+            if m and "{" in line:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+            continue
+        if cur is not None:
+            comps[cur].append(line.strip())
+
+    # 2. per-computation direct collective bytes + child edges
+    direct: dict[str, dict[str, int]] = {c: defaultdict(int) for c in comps}
+    children: dict[str, list[tuple[str, int]]] = {c: [] for c in comps}
+    for c, lines in comps.items():
+        for s in lines:
+            if " = " not in s:
+                continue
+            rhs = s.split(" = ", 1)[1]
+            head = rhs.split("(", 1)[0].strip()
+            opname = head.split()[-1] if head else ""
+            base = opname[:-6] if opname.endswith("-start") else opname
+            if base in COLLECTIVES:
+                direct[c][base] += _shape_bytes(rhs.split("(", 1)[0])
+            wm = _WHILE_RE.search(s)
+            if wm:
+                body = wm.group(1)
+                tm = _TRIP_RE.search(s)
+                trip = int(tm.group(1)) if tm else 1
+                children[c].append((body, trip))
+                continue
+            cm = _CALL_RE.search(s)
+            if cm and cm.group(1) in comps:
+                children[c].append((cm.group(1), 1))
+
+    # 3. accumulate multipliers from entry
+    mult: dict[str, float] = defaultdict(float)
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is None:
+        return {k: 0.0 for k in COLLECTIVES}
+    stack = [(entry, 1.0)]
+    seen_edges = 0
+    while stack:
+        comp, m = stack.pop()
+        mult[comp] += m
+        for child, trip in children.get(comp, ()):
+            seen_edges += 1
+            if seen_edges > 100_000:  # cycle guard
+                break
+            stack.append((child, m * trip))
+
+    out = {k: 0.0 for k in COLLECTIVES}
+    for c, d in direct.items():
+        if mult.get(c, 0.0) <= 0.0:
+            # unreachable from entry (e.g. while condition) — count once
+            continue
+        for k, v in d.items():
+            out[k] += v * mult[c]
+    return out

@@ -1,0 +1,210 @@
+"""Sharding policy: parameter, batch, and cache PartitionSpecs.
+
+Scheme (DESIGN.md §5): tensor parallelism over ``model`` (attention
+heads / FFN hidden / experts), FSDP-style parameter sharding over
+``data``; the ``pod`` axis is pure data parallelism (params replicated
+across pods; DCN-friendly). MoE expert weights shard the expert dim
+over ``model`` (expert parallelism) and the d_model dim over ``data``.
+
+Rules are name+rank based and tolerate the extra leading stack axis the
+segment scan adds (an extra leading ``None``).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+FSDP = "data"
+TP = "model"
+
+
+def _base_rule(names: list[str], cfg: ArchConfig) -> tuple:
+    """PartitionSpec elements for the UNSTACKED leaf."""
+    leaf = names[-1]
+    in_moe = "moe" in names
+    in_ssm = "ssm" in names
+
+    if "shared_attn" in names:
+        # zamba2's weight-shared block is applied 7x per pass; FSDP on it
+        # costs an all-gather per application (§Perf hillclimb B) while
+        # the whole block is ~184MB bf16 — keep it TP-only, no FSDP.
+        if leaf in ("wq", "wk", "wv", "gate", "up"):
+            return (None, TP)
+        if leaf in ("wo", "down"):
+            return (TP, None)
+        return None
+
+    if leaf == "embed":
+        return (TP, FSDP)
+    if leaf == "lm_head":
+        # no FSDP on the head: sharding its contraction dim over `data`
+        # makes XLA all-reduce (b,s,V) activations — measured 2x13GB per
+        # step on mamba2 (EXPERIMENTS.md §Perf). TP on vocab only.
+        return (None, TP)
+    if leaf in ("frontend_proj", "mtp_head"):
+        return (None, TP)
+    if leaf == "router":
+        return (None, None)
+    if in_moe and leaf in ("gate", "up"):
+        # expert parallelism when E divides the 16-way TP axis; else
+        # shard the expert FFN dim instead (grok-1 has E=8: dropping the
+        # axis silently left 38.8GB/dev of expert weights resident)
+        if cfg.num_experts % 16 == 0:
+            return (TP, FSDP, None)  # (E, d, f)
+        return (None, FSDP, TP)
+    if in_moe and leaf == "down":
+        if cfg.num_experts % 16 == 0:
+            return (TP, None, FSDP)  # (E, f, d)
+        return (None, TP, FSDP)
+    if leaf in ("gate", "up"):
+        return (FSDP, TP)
+    if leaf == "down":
+        return (TP, FSDP)
+    if leaf in ("wq", "wk", "wv", "wq_b"):
+        return (FSDP, TP) if leaf != "wq_b" else (None, TP)
+    if leaf == "wo":
+        return (TP, FSDP)
+    if leaf in ("wq_a", "wkv_a"):
+        return (FSDP, None)
+    if leaf in ("wkv_b_k", "wkv_b_v"):
+        return (TP, None, None)
+    if in_ssm and leaf == "in_proj":
+        return (FSDP, TP)
+    if in_ssm and leaf == "out_proj":
+        return (TP, FSDP)
+    if in_ssm and leaf in ("conv_w",):
+        return (None, TP)
+    if in_ssm and leaf in ("conv_b", "norm"):
+        return (TP,)
+    # norms, biases, scalars-per-head (a_log, dt_bias, D), kv_norm, q_norm
+    return None  # replicate
+
+
+def fit_spec(spec: P, shape: tuple[int, ...], axis_sizes: dict[str, int]) -> P:
+    """Drop sharding axes that don't evenly divide the dimension (jit
+    input shardings require exact divisibility). E.g. vocab=50280 can't
+    shard 16-way -> replicated; kv_heads=4 over a 16-way axis -> local."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, part in zip(shape, parts):
+        if part is None:
+            out.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        size = 1
+        for a in axes:
+            size *= axis_sizes[a]
+        out.append(part if dim % size == 0 else None)
+    return P(*out)
+
+
+def fit_sharding_tree(mesh, spec_tree, shape_tree):
+    """NamedSharding tree with per-leaf divisibility fixes."""
+    from jax.sharding import NamedSharding
+
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree.map(
+        lambda spec, s: NamedSharding(mesh, fit_spec(spec, s.shape, axis_sizes)),
+        spec_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+    return out
+
+
+def _serve_rule(rule: tuple | None, names: list[str]) -> tuple | None:
+    """Serving keeps weights resident: no FSDP over ``data`` for 2D
+    weights (a per-token all-gather would dominate decode — measured in
+    EXPERIMENTS.md §Perf). 3D expert weights stay 2D-sharded
+    (E replicated-or-model, d over data, f over model) so giants still
+    fit; the resulting all-reduce is tiny (capacity x f)."""
+    if rule is None:
+        return None
+    if len(rule) == 3 and "moe" in names:
+        return (None, FSDP, TP)
+    return tuple(None if r == FSDP else r for r in rule)
+
+
+def param_pspecs(params_shapes, cfg: ArchConfig, mode: str = "train"):
+    """PartitionSpec pytree matching a params (shape) pytree.
+
+    mode: "train" (FSDP+TP) or "serve" (TP-resident; see _serve_rule).
+    """
+
+    def spec_for(path, leaf):
+        names = _names(path)
+        rule = _base_rule(names, cfg)
+        if mode == "serve":
+            rule = _serve_rule(rule, names)
+        if rule is None:
+            return P()
+        rank = len(leaf.shape)
+        pad = rank - len(rule)
+        if pad < 0:  # e.g. reduced configs; replicate rather than crash
+            return P()
+        return P(*((None,) * pad + tuple(rule)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shapes)
+
+
+def opt_pspecs(params_pspecs):
+    """Optimizer state mirrors the params sharding; step is replicated."""
+    return {
+        "mu": params_pspecs,
+        "nu": params_pspecs,
+        "step": P(),
+    }
+
+
+def batch_pspecs(batch_shapes, dp: tuple[str, ...], shard_batch: bool = True):
+    lead = dp if shard_batch else None
+
+    def spec_for(path, leaf):
+        rank = len(leaf.shape)
+        return P(*((lead,) + (None,) * (rank - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shapes)
+
+
+def cache_pspecs(cache_shapes, cfg: ArchConfig, dp: tuple[str, ...], long_context: bool):
+    """Decode-cache specs.
+
+    Normal decode: batch over the data axes, everything else local
+    (heads often don't divide the 16-way model axis; XLA would pad).
+    Long-context (batch=1): shard the cache *sequence* dim over
+    ``model`` instead (flash-decoding style split; softmax combines
+    partial sums with the collectives XLA inserts). SSM states shard
+    heads over ``model``.
+    """
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        rank = len(shape)
+        if rank == 5:  # (reps, b, S, K, hd) kv OR (reps, b, H, N, P) ssm state
+            # distinguish: kv caches have shape[2] == max_len (large)
+            is_kv = shape[2] >= 4096
+            if is_kv:
+                # sequence over `model` (flash-decoding split: kv heads
+                # rarely divide a 16-way axis; the cache must not be
+                # replicated across it — measured 64GB/step all-gathers
+                # otherwise), batch over the data axes.
+                return P(None, None if long_context else dp, TP, None, None)
+            return P(None, dp if not long_context else None, TP, None, None)
+        if rank == 4:  # (reps, b, S, r) mla latent or (reps, b, k-1, ch) conv
+            is_kv = shape[2] >= 4096
+            if is_kv:
+                return P(None, None if long_context else dp, TP, None)
+            return P(None, dp if not long_context else None, None, TP)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)

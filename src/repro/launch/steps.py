@@ -1,0 +1,110 @@
+"""pjit step functions + dry-run input specs.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for every model input per assigned input
+shape — the dry-run lowers against these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, init_cache, init_params, loss_fn
+from repro.models.config import ArchConfig
+from repro.optim import AdamWConfig, apply_updates
+
+# The four assigned input shapes: name -> (seq_len, global_batch, kind)
+INPUT_SHAPES: dict[str, tuple[int, int, str]] = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    """Is this (arch, shape) pair runnable? (the long_500k skip rule)."""
+    if shape_name == "long_500k" and not cfg.supports_long_decode:
+        return False, (
+            "pure full-attention decode at 524288 tokens is quadratic-"
+            "history/linear-per-token with an unsharded 500k KV per layer; "
+            "skipped per assignment (no sliding-window/SSM variant)"
+        )
+    return True, ""
+
+
+def batch_specs(cfg: ArchConfig, shape_name: str) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for a training/prefill batch."""
+    seq, gb, kind = INPUT_SHAPES[shape_name]
+    spec = {
+        "tokens": jax.ShapeDtypeStruct((gb, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((gb, seq), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((gb, seq), jnp.float32),
+    }
+    if cfg.frontend is not None:
+        spec["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (gb, cfg.frontend_len, cfg.frontend_dim), jnp.float32
+        )
+    return spec
+
+
+def decode_specs(cfg: ArchConfig, shape_name: str) -> dict[str, Any]:
+    """ShapeDtypeStructs for one decode step: token, caches, pos."""
+    seq, gb, kind = INPUT_SHAPES[shape_name]
+    assert kind == "decode"
+    enc_len = cfg.frontend_len if cfg.is_encdec() else 0
+    caches = jax.eval_shape(lambda: init_cache(cfg, gb, seq, enc_len=enc_len))
+    return {
+        "token": jax.ShapeDtypeStruct((gb, 1), jnp.int32),
+        "caches": caches,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig) -> Callable:
+    def train_step(params, opt_state, batch):
+        def loss_only(p):
+            loss, metrics = loss_fn(p, cfg, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_only, has_aux=True)(params)
+        params, opt_state = apply_updates(params, grads, opt_state, opt_cfg)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    from repro.models import prefill
+
+    def prefill_step(params, batch):
+        logits, caches = prefill(params, cfg, batch)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    def serve_step(params, token, caches, pos):
+        logits, caches = decode_step(params, cfg, token, caches, pos)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        return next_token, caches
+
+    return serve_step
+
+
+def dryrun_cfg(cfg: ArchConfig) -> ArchConfig:
+    """Numerics for the production lowering: bf16 params + bf16 compute
+    (param_count > 100B also gets bf16 optimizer states — see dryrun)."""
+    return dataclasses.replace(cfg, param_dtype="bfloat16", compute_dtype="bfloat16")
+
+
+def opt_config_for(cfg: ArchConfig) -> AdamWConfig:
+    # giants: bf16 Adam moments (DESIGN.md §5)
+    big = cfg.num_experts >= 8 and cfg.d_model >= 6000
+    return AdamWConfig(state_dtype="bfloat16" if big else "float32")

@@ -1,0 +1,117 @@
+"""Training driver (works on the CPU host mesh and, unchanged, on a
+real pod — the mesh is the only difference).
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-9b --steps 50 \
+      --reduced --batch 8 --seq 128 [--tmsn --workers 4]
+
+``--tmsn`` trains with the TMSN-SGD strategy (paper's protocol as the
+distribution strategy) instead of synchronous data parallelism.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config, reduced
+from repro.data.tokens import TokenPipeline
+from repro.launch.steps import make_train_step
+from repro.models import init_params
+from repro.optim import AdamWConfig, init_opt_state, warmup_cosine
+
+
+def train_sync(cfg, args) -> dict:
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    opt_cfg = AdamWConfig(lr=args.lr)
+    opt_state = init_opt_state(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+    pipe = TokenPipeline(
+        batch=args.batch, seq=args.seq, vocab=cfg.vocab, seed=args.seed,
+        frontend_len=cfg.frontend_len if cfg.frontend else 0,
+        frontend_dim=cfg.frontend_dim if cfg.frontend else 0,
+    )
+    losses = []
+    t0 = time.time()
+    for step, batch in zip(range(args.steps), pipe):
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % max(args.steps // 10, 1) == 0:
+            print(f"step {step:5d} loss {loss:.4f} ({time.time()-t0:.1f}s)", flush=True)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params)
+        print(f"saved checkpoint -> {args.ckpt}")
+    return {"losses": losses, "params": params}
+
+
+def train_tmsn(cfg, args) -> dict:
+    from repro.core.tmsn_sgd import TMSNSGDConfig, init_tmsn_state, make_tmsn_round
+
+    opt_cfg = AdamWConfig(lr=args.lr)
+    tcfg = TMSNSGDConfig(num_workers=args.workers, local_steps=args.local_steps, eps=args.eps)
+    key = jax.random.PRNGKey(args.seed)
+    params_w, opt_w, cert_w = init_tmsn_state(cfg, opt_cfg, tcfg, key)
+    round_fn = jax.jit(make_tmsn_round(cfg, opt_cfg, tcfg), donate_argnums=(0, 1))
+    pipe = TokenPipeline(
+        batch=args.batch, seq=args.seq, vocab=cfg.vocab, seed=args.seed,
+        frontend_len=cfg.frontend_len if cfg.frontend else 0,
+        frontend_dim=cfg.frontend_dim if cfg.frontend else 0,
+    )
+    it = iter(pipe)
+    W, K = tcfg.num_workers, tcfg.local_steps
+    losses = []
+    rounds = max(args.steps // K, 1)
+    t0 = time.time()
+    for r in range(rounds):
+        # gather W*K batches and stack to (W, K, b, s)
+        batches = [next(it) for _ in range(W * K)]
+        batch_w = {
+            k: jnp.stack([b[k] for b in batches]).reshape((W, K) + batches[0][k].shape)
+            for k in batches[0]
+        }
+        params_w, opt_w, cert_w, loss = round_fn(params_w, opt_w, cert_w, batch_w)
+        losses.append(float(loss))
+        print(
+            f"round {r:4d} mean-loss {float(loss):.4f} certs "
+            f"[{float(jnp.min(cert_w)):.4f},{float(jnp.max(cert_w)):.4f}] "
+            f"({time.time()-t0:.1f}s)",
+            flush=True,
+        )
+    return {"losses": losses, "certs": np.asarray(cert_w)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--reduced", action="store_true", help="smoke-size variant (CPU)")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--tmsn", action="store_true")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--eps", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    print(f"training {cfg.name} ({'reduced' if args.reduced else 'FULL'}) "
+          f"{'TMSN-SGD' if args.tmsn else 'sync-DP'}")
+    if args.tmsn:
+        train_tmsn(cfg, args)
+    else:
+        train_sync(cfg, args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Transformer/SSM/MoE model zoo for the assigned architectures.
+
+Pure-functional JAX: ``init_params(cfg, key)`` builds a param pytree,
+``loss_fn`` / ``prefill`` / ``decode_step`` apply it. Layer stacks are
+``lax.scan`` over stacked params (one scan per homogeneous segment) so
+the HLO stays small enough to lower 61-layer 671B-param graphs.
+"""
+
+from repro.models.config import ArchConfig, LayerSpec, layer_segments
+from repro.models.model import (
+    init_params,
+    loss_fn,
+    prefill,
+    decode_step,
+    init_cache,
+    param_count,
+)
+
+__all__ = [
+    "ArchConfig",
+    "LayerSpec",
+    "layer_segments",
+    "init_params",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "param_count",
+]

@@ -1,0 +1,268 @@
+"""Attention variants: GQA (with optional sliding window), MLA
+(DeepSeek-V3 multi-head latent attention, compressed KV cache), and
+cross-attention (enc-dec). Full-sequence and single-token-decode paths.
+
+All shapes: x (b, s, d); caches are (b, S_max, ...) with a scalar
+``pos`` write index (batch decodes in lockstep — the serving layer
+batches same-phase requests).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import apply_rope, init_linear, rope_freqs
+
+NEG_INF = -1e30
+
+
+def _causal_window_mask(
+    qpos: jnp.ndarray, kpos: jnp.ndarray, window: int | None
+) -> jnp.ndarray:
+    """(.., sq, sk) boolean mask: kpos <= qpos (& within window)."""
+    m = kpos[..., None, :] <= qpos[..., :, None]
+    if window is not None:
+        m &= kpos[..., None, :] > qpos[..., :, None] - window
+    return m
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q (b,sq,K,G,h), k/v (b,sk,K,h), mask (b,sq,sk) -> (b,sq,K,G,h)."""
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k) * scale
+    scores = jnp.where(mask[:, None, None, :, :], scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+
+
+# ----------------------------------------------------------------------------
+# GQA
+# ----------------------------------------------------------------------------
+
+
+def init_gqa(key: jax.Array, cfg: ArchConfig, dtype) -> dict:
+    hd = cfg.hd()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(k1, cfg.d_model, cfg.num_heads * hd, dtype),
+        "wk": init_linear(k2, cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wv": init_linear(k3, cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wo": init_linear(k4, cfg.num_heads * hd, cfg.d_model, dtype),
+    }
+
+
+def _gqa_qkv(params, x, positions, cfg: ArchConfig):
+    b, s, _ = x.shape
+    hd = cfg.hd()
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(x.dtype)).reshape(b, s, H, hd)
+    k = jnp.einsum("bsd,de->bse", x, params["wk"].astype(x.dtype)).reshape(b, s, K, hd)
+    v = jnp.einsum("bsd,de->bse", x, params["wv"].astype(x.dtype)).reshape(b, s, K, hd)
+    cos, sin = rope_freqs(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_full(
+    params: dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ArchConfig,
+    window: int | None = None,
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence causal attention. Returns (out, (k, v)) — k/v are
+    returned so prefill can seed the cache."""
+    b, s, _ = x.shape
+    hd = cfg.hd()
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    G = H // K
+    q, k, v = _gqa_qkv(params, x, positions, cfg)
+    qg = q.reshape(b, s, K, G, hd)
+    mask = _causal_window_mask(positions, positions, window)
+    out = _sdpa(qg, k, v, mask, hd ** -0.5).reshape(b, s, H * hd)
+    out = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
+    return out, (k, v)
+
+
+def gqa_decode(
+    params: dict,
+    x: jnp.ndarray,  # (b, 1, d)
+    cache_k: jnp.ndarray,  # (b, S, K, hd)
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,  # () int32 — current write position
+    cfg: ArchConfig,
+    window: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode against a KV cache. Returns (out, k', v')."""
+    b = x.shape[0]
+    hd = cfg.hd()
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    G = H // K
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _gqa_qkv(params, x, positions, cfg)
+    S = cache_k.shape[1]
+    # ring-buffer mode: a windowed layer whose cache is sized below the
+    # decode horizon writes at pos % S; keys carry their absolute-pos
+    # RoPE phases so the ring is transparent to attention.
+    write_pos = pos % S
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), write_pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), write_pos, axis=1)
+    slot = jnp.arange(S, dtype=jnp.int32)
+    # absolute position currently held by each ring slot
+    kpos_row = pos - (pos - slot) % S
+    kpos = jnp.broadcast_to(kpos_row, (b, S))
+    mask = _causal_window_mask(positions, kpos, window) & (kpos[:, None, :] >= 0)
+    qg = q.reshape(b, 1, K, G, hd)
+    out = _sdpa(qg, cache_k.astype(x.dtype), cache_v.astype(x.dtype), mask, hd ** -0.5)
+    out = out.reshape(b, 1, H * hd)
+    out = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
+    return out, cache_k, cache_v
+
+
+# ----------------------------------------------------------------------------
+# MLA (DeepSeek-V3): low-rank Q, compressed latent KV cache, rope/nope split
+# ----------------------------------------------------------------------------
+
+
+def init_mla(key: jax.Array, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    H = cfg.num_heads
+    qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    p = {
+        "wkv_a": init_linear(ks[2], cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_head_dim, dtype),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), dtype),
+        # absorbed projections, stored per-head
+        "wkv_b_k": (jax.random.normal(ks[3], (H, cfg.qk_nope_head_dim, cfg.kv_lora_rank))
+                    * cfg.kv_lora_rank ** -0.5).astype(dtype),
+        "wkv_b_v": (jax.random.normal(ks[4], (H, cfg.kv_lora_rank, cfg.v_head_dim))
+                    * cfg.kv_lora_rank ** -0.5).astype(dtype),
+        "wo": init_linear(ks[5], H * cfg.v_head_dim, cfg.d_model, dtype),
+    }
+    if cfg.q_lora_rank:
+        p["wq_a"] = init_linear(ks[0], cfg.d_model, cfg.q_lora_rank, dtype)
+        p["q_norm"] = jnp.zeros((cfg.q_lora_rank,), dtype)
+        p["wq_b"] = init_linear(ks[1], cfg.q_lora_rank, H * qk_dim, dtype)
+    else:
+        p["wq"] = init_linear(ks[0], cfg.d_model, H * qk_dim, dtype)
+    return p
+
+
+def _mla_q(params, x, positions, cfg: ArchConfig):
+    from repro.models.layers import rms_norm
+
+    b, s, _ = x.shape
+    H = cfg.num_heads
+    nd, rd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        ql = jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(x.dtype))
+        ql = rms_norm(ql, params["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,re->bse", ql, params["wq_b"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(x.dtype))
+    q = q.reshape(b, s, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    cos, sin = rope_freqs(positions, rd, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    # absorb the key up-projection into the query -> latent space
+    q_lat = jnp.einsum("bshn,hnr->bshr", q_nope, params["wkv_b_k"].astype(x.dtype))
+    return q_lat, q_rope
+
+
+def _mla_kv_latent(params, x, positions, cfg: ArchConfig):
+    from repro.models.layers import rms_norm
+
+    rd = cfg.qk_rope_head_dim
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(x.dtype))
+    c_kv, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = rms_norm(c_kv, params["kv_norm"], cfg.norm_eps)
+    cos, sin = rope_freqs(positions, rd, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[..., None, :], cos, sin)[..., 0, :]  # shared head
+    return c_kv, k_rope
+
+
+def _mla_attend(params, q_lat, q_rope, c_kv, k_rope, mask, cfg: ArchConfig, dtype):
+    scale = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim) ** -0.5
+    scores = jnp.einsum("bqhr,bsr->bhqs", q_lat, c_kv) + jnp.einsum(
+        "bqhr,bsr->bhqs", q_rope, k_rope
+    )
+    scores = jnp.where(mask[:, None, :, :], scores.astype(jnp.float32) * scale, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    out_lat = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv)
+    v = jnp.einsum("bqhr,hrv->bqhv", out_lat, params["wkv_b_v"].astype(dtype))
+    b, s = v.shape[0], v.shape[1]
+    out = v.reshape(b, s, cfg.num_heads * cfg.v_head_dim)
+    return jnp.einsum("bse,ed->bsd", out, params["wo"].astype(dtype))
+
+
+def mla_full(
+    params: dict, x: jnp.ndarray, positions: jnp.ndarray, cfg: ArchConfig
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    q_lat, q_rope = _mla_q(params, x, positions, cfg)
+    c_kv, k_rope = _mla_kv_latent(params, x, positions, cfg)
+    mask = _causal_window_mask(positions, positions, None)
+    out = _mla_attend(params, q_lat, q_rope, c_kv, k_rope, mask, cfg, x.dtype)
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(
+    params: dict,
+    x: jnp.ndarray,
+    cache_ckv: jnp.ndarray,  # (b, S, kv_lora_rank)
+    cache_krope: jnp.ndarray,  # (b, S, qk_rope_head_dim)
+    pos: jnp.ndarray,
+    cfg: ArchConfig,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_lat, q_rope = _mla_q(params, x, positions, cfg)
+    c_new, r_new = _mla_kv_latent(params, x, positions, cfg)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(cache_ckv, c_new.astype(cache_ckv.dtype), pos, axis=1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(cache_krope, r_new.astype(cache_krope.dtype), pos, axis=1)
+    S = cache_ckv.shape[1]
+    kpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (b, S))
+    mask = _causal_window_mask(positions, kpos, None)
+    out = _mla_attend(
+        params, q_lat, q_rope, cache_ckv.astype(x.dtype), cache_krope.astype(x.dtype), mask, cfg, x.dtype
+    )
+    return out, cache_ckv, cache_krope
+
+
+# ----------------------------------------------------------------------------
+# Cross-attention (enc-dec decoder layers)
+# ----------------------------------------------------------------------------
+
+
+def init_cross(key: jax.Array, cfg: ArchConfig, dtype) -> dict:
+    hd = cfg.hd()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(k1, cfg.d_model, cfg.num_heads * hd, dtype),
+        "wk": init_linear(k2, cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wv": init_linear(k3, cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wo": init_linear(k4, cfg.num_heads * hd, cfg.d_model, dtype),
+    }
+
+
+def cross_kv(params: dict, enc: jnp.ndarray, cfg: ArchConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Precompute encoder-side K/V once per request (prefill)."""
+    b, s, _ = enc.shape
+    hd = cfg.hd()
+    K = cfg.num_kv_heads
+    k = jnp.einsum("bsd,de->bse", enc, params["wk"].astype(enc.dtype)).reshape(b, s, K, hd)
+    v = jnp.einsum("bsd,de->bse", enc, params["wv"].astype(enc.dtype)).reshape(b, s, K, hd)
+    return k, v
+
+
+def cross_attend(
+    params: dict, x: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cfg: ArchConfig
+) -> jnp.ndarray:
+    b, s, _ = x.shape
+    hd = cfg.hd()
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    G = H // K
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(x.dtype)).reshape(b, s, K, G, hd)
+    mask = jnp.ones((b, s, k.shape[1]), bool)  # full visibility of encoder
+    out = _sdpa(q, k.astype(x.dtype), v.astype(x.dtype), mask, hd ** -0.5).reshape(b, s, H * hd)
+    return jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))

@@ -1,0 +1,77 @@
+"""Shared low-level layers: RMSNorm, SwiGLU MLP, RoPE, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rms_norm(d: int, dtype) -> jnp.ndarray:
+    return jnp.zeros((d,), dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down.astype(x.dtype))
+
+
+def init_mlp(key: jax.Array, d: int, f: int, dtype, gated: bool = True) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = f ** -0.5
+    p = {
+        "up": (jax.random.normal(k2, (d, f)) * s_in).astype(dtype),
+        "down": (jax.random.normal(k3, (f, d)) * s_out).astype(dtype),
+    }
+    if gated:
+        p["gate"] = (jax.random.normal(k1, (d, f)) * s_in).astype(dtype)
+    return p
+
+
+def apply_mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if "gate" in params:
+        return swiglu(x, params["gate"], params["up"], params["down"])
+    u = jnp.einsum("...d,df->...f", x, params["up"].astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(u), params["down"].astype(x.dtype))
+
+
+def rope_freqs(positions: jnp.ndarray, dim: int, theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (...,) -> cos/sin of shape (..., dim//2)."""
+    half = dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x (..., s, h, dim); cos/sin (..., s, dim//2) broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def init_embedding(key: jax.Array, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def init_linear(key: jax.Array, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (d_in, d_out)) * d_in ** -0.5).astype(dtype)
+
+
+def softmax_cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """Mean next-token loss. logits (b,s,V) f32, labels (b,s) int, mask (b,s)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,88 @@
+"""Mixture-of-Experts with capacity-based dispatch (DeepSeek-V3 /
+Grok-1 style: shared + routed experts, top-k softmax gate).
+
+Dispatch uses the one-hot + cumsum position scheme (the standard JAX
+MoE formulation): token slots are scattered into a dense
+(experts, capacity, d) buffer, expert FFNs run as a single batched
+einsum with the expert dim sharded over the ``model`` mesh axis
+(expert parallelism), and results are combined back with the gate
+weights. Tokens over capacity are dropped (their residual passes
+through) — capacity_factor controls the drop rate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import init_linear, init_mlp
+
+
+def init_moe(key: jax.Array, cfg: ArchConfig, dtype) -> dict:
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.expert_ff()
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": init_linear(k1, d, E, jnp.float32),  # router kept f32
+        "gate": (jax.random.normal(k2, (E, d, f)) * d ** -0.5).astype(dtype),
+        "up": (jax.random.normal(k3, (E, d, f)) * d ** -0.5).astype(dtype),
+        "down": (jax.random.normal(k4, (E, f, d)) * f ** -0.5).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(k5, d, f * cfg.num_shared_experts, dtype)
+    return p
+
+
+def moe_capacity(cfg: ArchConfig, num_tokens: int) -> int:
+    cap = int(num_tokens * cfg.num_experts_per_tok * cfg.capacity_factor / cfg.num_experts)
+    return max(8, -(-cap // 8) * 8)  # round up to a multiple of 8
+
+
+def apply_moe(
+    params: dict, x: jnp.ndarray, cfg: ArchConfig
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out (b,s,d), aux_loss ()). Router runs in f32."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.num_experts_per_tok
+    E = cfg.num_experts
+    C = moe_capacity(cfg, t)
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (t, E)
+    topw, topi = jax.lax.top_k(probs, k)  # (t, k)
+    topw = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    assign = jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32)  # top-1 fraction
+    fe = jnp.mean(assign, axis=0)
+    aux = E * jnp.sum(fe * me) * cfg.router_aux_coef
+
+    # slot layout: slot i covers token i//k, choice i%k
+    sid = topi.reshape(t * k)  # expert id per slot
+    onehot = jax.nn.one_hot(sid, E, dtype=jnp.int32)  # (t*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot
+    pos = jnp.sum(pos_in_e, axis=-1) - 1  # (t*k,) 0-based position within expert
+    keep = (pos >= 0) & (pos < C)
+    pos_c = jnp.clip(pos, 0, C - 1)
+
+    tok = jnp.arange(t * k) // k
+    slot_x = xt[tok] * keep[:, None].astype(xt.dtype)  # (t*k, d)
+    buf = jnp.zeros((E, C, d), xt.dtype).at[sid, pos_c].add(slot_x)
+
+    # expert FFN (SwiGLU), expert dim sharded over `model`
+    g = jnp.einsum("ecd,edf->ecf", buf, params["gate"].astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["up"].astype(buf.dtype))
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, params["down"].astype(buf.dtype))
+
+    out_slots = y[sid, pos_c] * keep[:, None].astype(y.dtype)
+    out_slots = out_slots * topw.reshape(t * k, 1).astype(y.dtype)
+    out = jnp.sum(out_slots.reshape(t, k, d), axis=1)
+
+    if "shared" in params:
+        from repro.models.layers import apply_mlp
+
+        out = out + apply_mlp(params["shared"], xt)
+    return out.reshape(b, s, d), aux

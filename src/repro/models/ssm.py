@@ -1,0 +1,207 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060).
+
+Training path: the chunked SSD algorithm — within-chunk "attention"
+term (the duality: a masked C@B^T matmul, MXU-friendly) plus an
+inter-chunk recurrence carried by ``lax.scan``. Decode path: the O(1)
+recurrent state update. Both share the same discretization so they are
+numerically consistent (tested).
+
+Recurrence (per head; state h in R^{N x P}):
+    h_t = exp(-exp(a_log) * dt_t) * h_{t-1} + dt_t * B_t (x) x_t
+    y_t = C_t . h_t + D * x_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import init_linear
+
+
+def ssm_dims(cfg: ArchConfig) -> tuple[int, int, int, int]:
+    """(d_inner, heads, head_dim, state)."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_inner // P
+    return d_inner, H, P, cfg.ssm_state
+
+
+def init_ssm(key: jax.Array, cfg: ArchConfig, dtype) -> dict:
+    d_inner, H, P, N = ssm_dims(cfg)
+    conv_ch = d_inner + 2 * N  # conv over [x, B, C]
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj -> [z (gate), x, B, C, dt]
+        "in_proj": init_linear(ks[0], cfg.d_model, 2 * d_inner + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((H,), jnp.float32),  # A = -exp(a_log) = -1
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": init_linear(ks[2], d_inner, cfg.d_model, dtype),
+    }
+
+
+def _split_proj(proj: jnp.ndarray, cfg: ArchConfig):
+    d_inner, H, P, N = ssm_dims(cfg)
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner : 2 * d_inner + 2 * N]
+    dt = proj[..., 2 * d_inner + 2 * N :]
+    return z, xBC, dt
+
+
+def _causal_conv_full(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over (b, s, ch) with taps (k, ch)."""
+    k = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xBC.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def ssd_full(
+    params: dict, x: jnp.ndarray, cfg: ArchConfig
+) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence Mamba2 block. Returns (out, (state, conv_tail)) so
+    prefill can seed the decode cache."""
+    from repro.models.layers import rms_norm
+
+    bsz, s, _ = x.shape
+    d_inner, H, P, N = ssm_dims(cfg)
+    Q = min(cfg.ssm_chunk, s)
+    assert s % Q == 0, "seq must divide into SSD chunks"
+    nc = s // Q
+
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    z, xBC, dt_raw = _split_proj(proj, cfg)
+    xBC = _causal_conv_full(xBC, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype))
+    xs = xBC[..., :d_inner].reshape(bsz, s, H, P)
+    B = xBC[..., d_inner : d_inner + N]  # (b, s, N) single group
+    C = xBC[..., d_inner + N :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (b,s,H)
+    a = -jnp.exp(params["a_log"])  # (H,)
+    log_da = dt * a[None, None, :]  # log decay, (b,s,H) (negative)
+
+    # chunk views
+    xs_c = xs.reshape(bsz, nc, Q, H, P)
+    B_c = B.reshape(bsz, nc, Q, N).astype(jnp.float32)
+    C_c = C.reshape(bsz, nc, Q, N).astype(jnp.float32)
+    dt_c = dt.reshape(bsz, nc, Q, H)
+    ld_c = log_da.reshape(bsz, nc, Q, H)
+    cum = jnp.cumsum(ld_c, axis=2)  # l_i per chunk
+
+    # intra-chunk (the "duality" matmul): M_ij = exp(l_i - l_j), i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,Q,Q,H)
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    M = jnp.where(causal, jnp.exp(diff), 0.0)
+    G = jnp.einsum("bcqn,bcsn->bcqs", C_c, B_c)  # (b,nc,Q,Q)
+    W = G[..., None] * M  # (b,nc,Q,Q,H)
+    xdt = xs_c.astype(jnp.float32) * dt_c[..., None]
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", W, xdt)
+
+    # chunk-final states: S_c = sum_j exp(l_Q - l_j) dt_j B_j (x) x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,nc,Q,H)
+    S_c = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", decay_to_end, B_c, xdt)
+    if cfg.act_dp is not None:
+        # keep the state H-sharded over `model`: otherwise the H-sharded
+        # decay/xdt operands get all-gathered against the N-sharded B
+        # (8 x 1.07GB/step measured on zamba2 — §Perf hillclimb B)
+        S_c = jax.lax.with_sharding_constraint(
+            S_c, jax.sharding.PartitionSpec(cfg.act_dp, None, "model", None, None)
+        )
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b,nc,H)
+
+    def scan_fn(carry, inp):
+        s_chunk, decay = inp  # (b,H,N,P), (b,H)
+        new = carry * decay[:, :, None, None] + s_chunk
+        return new, carry  # emit state BEFORE this chunk
+
+    init_state = jnp.zeros((bsz, H, N, P), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn,
+        init_state,
+        (S_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,H,N,P)
+
+    # inter-chunk: y_i += C_i . (exp(l_i) * S_prev)
+    decay_in = jnp.exp(cum)  # (b,nc,Q,H)
+    y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", C_c, prev_states, decay_in)
+
+    y = (y_intra + y_inter).reshape(bsz, s, H, P)
+    y = y + xs.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+
+    conv_tail = xBC_tail(x, params, cfg)
+    return out, (final_state, conv_tail)
+
+
+def xBC_tail(x: jnp.ndarray, params: dict, cfg: ArchConfig) -> jnp.ndarray:
+    """Last (conv_width-1) pre-conv channels — the decode conv state."""
+    d_inner, H, P, N = ssm_dims(cfg)
+    k = cfg.ssm_conv_width
+    proj = jnp.einsum("bsd,de->bse", x[:, -(k - 1):, :], params["in_proj"].astype(x.dtype))
+    _, xBC, _ = _split_proj(proj, cfg)
+    return xBC  # (b, k-1, conv_ch)
+
+
+def ssd_decode(
+    params: dict,
+    x: jnp.ndarray,  # (b, 1, d)
+    state: jnp.ndarray,  # (b, H, N, P) f32
+    conv_state: jnp.ndarray,  # (b, k-1, conv_ch)
+    cfg: ArchConfig,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token recurrent step. Returns (out, state', conv_state')."""
+    from repro.models.layers import rms_norm
+
+    bsz = x.shape[0]
+    d_inner, H, P, N = ssm_dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    z, xBC_new, dt_raw = _split_proj(proj, cfg)
+
+    # causal conv over the rolling window [conv_state, new]
+    window = jnp.concatenate([conv_state.astype(x.dtype), xBC_new], axis=1)  # (b, k, ch)
+    w = params["conv_w"].astype(x.dtype)
+    conv = jnp.sum(window * w[None, :, :], axis=1) + params["conv_b"].astype(x.dtype)
+    xBC = jax.nn.silu(conv)  # (b, ch)
+    xs = xBC[:, :d_inner].reshape(bsz, H, P).astype(jnp.float32)
+    B = xBC[:, d_inner : d_inner + N].astype(jnp.float32)
+    C = xBC[:, d_inner + N :].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw[:, 0, :].astype(jnp.float32) + params["dt_bias"])  # (b,H)
+    da = jnp.exp(dt * -jnp.exp(params["a_log"]))  # (b,H)
+    state = state * da[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, B, xs
+    )
+    y = jnp.einsum("bn,bhnp->bhp", C, state) + xs * params["D"][None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+    conv_state = window[:, 1:, :]
+    return out, state, conv_state
+
+
+def ssd_reference(
+    params: dict, x: jnp.ndarray, cfg: ArchConfig
+) -> jnp.ndarray:
+    """Step-by-step recurrence oracle (slow; tests only)."""
+    bsz, s, _ = x.shape
+    d_inner, H, P, N = ssm_dims(cfg)
+    k = cfg.ssm_conv_width
+    state = jnp.zeros((bsz, H, N, P), jnp.float32)
+    conv_ch = d_inner + 2 * N
+    conv_state = jnp.zeros((bsz, k - 1, conv_ch), x.dtype)
+    outs = []
+    for i in range(s):
+        o, state, conv_state = ssd_decode(params, x[:, i : i + 1, :], state, conv_state, cfg)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,273 @@
+"""Blocks + segment-scanned stacks.
+
+A *segment* is a repeating unit of layers scanned over its repeat count
+(``lax.scan`` keeps the HLO size O(unique layers), which is what lets a
+61-layer MoE or 64-layer Grok lower quickly). ``shared_attn`` layers
+(Zamba2) close over one un-stacked param set — true weight sharing —
+while still getting a per-application KV cache slot.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.config import ArchConfig, LayerSpec, encoder_segments, layer_segments
+from repro.models.layers import apply_mlp, init_mlp, init_rms_norm, rms_norm
+from repro.models.moe import apply_moe, init_moe
+from repro.models.ssm import init_ssm, ssd_decode, ssd_full, ssm_dims
+
+
+# ----------------------------------------------------------------------------
+# per-layer init
+# ----------------------------------------------------------------------------
+
+
+def init_layer(key: jax.Array, spec: LayerSpec, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    if spec.kind == "ssm":
+        return {"ln1": init_rms_norm(cfg.d_model, dtype), "ssm": init_ssm(ks[0], cfg, dtype)}
+    p: dict[str, Any] = {"ln1": init_rms_norm(cfg.d_model, dtype)}
+    if cfg.attention == "mla" and spec.kind in ("attn", "moe"):
+        p["attn"] = attn.init_mla(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attn.init_gqa(ks[0], cfg, dtype)
+    if spec.cross_attention:
+        p["ln_x"] = init_rms_norm(cfg.d_model, dtype)
+        p["cross"] = attn.init_cross(ks[1], cfg, dtype)
+    p["ln2"] = init_rms_norm(cfg.d_model, dtype)
+    if spec.kind == "moe":
+        p["moe"] = init_moe(ks[2], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype, gated=cfg.mlp_gated)
+    return p
+
+
+def init_shared_attn(key: jax.Array, cfg: ArchConfig, dtype) -> dict:
+    """Zamba2's single shared transformer block."""
+    return init_layer(key, LayerSpec(kind="attn"), cfg, dtype)
+
+
+# ----------------------------------------------------------------------------
+# per-layer apply — full sequence (training / prefill)
+# ----------------------------------------------------------------------------
+
+
+def apply_layer_full(
+    p: dict,
+    spec: LayerSpec,
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    enc_out: jnp.ndarray | None,
+):
+    """Returns (x', cache_entry, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if spec.kind == "ssm":
+        h, (state, conv_tail) = ssd_full(p["ssm"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+        return x + h, (state, conv_tail), aux
+
+    h_in = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attention == "mla" and spec.kind in ("attn", "moe"):
+        h, (ckv, krope) = attn.mla_full(p["attn"], h_in, positions, cfg)
+        cache = (ckv, krope)
+    else:
+        h, (k, v) = attn.gqa_full(p["attn"], h_in, positions, cfg, window=spec.window)
+        cache = (k, v)
+    x = x + h
+    if spec.cross_attention:
+        assert enc_out is not None
+        ck, cv = attn.cross_kv(p["cross"], enc_out, cfg)
+        x = x + attn.cross_attend(p["cross"], rms_norm(x, p["ln_x"], cfg.norm_eps), ck, cv, cfg)
+        cache = cache + (ck, cv)
+    h2_in = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if spec.kind == "moe":
+        h2, aux = apply_moe(p["moe"], h2_in, cfg)
+    else:
+        h2 = apply_mlp(p["mlp"], h2_in)
+    return x + h2, cache, aux
+
+
+# ----------------------------------------------------------------------------
+# per-layer apply — one-token decode against a cache entry
+# ----------------------------------------------------------------------------
+
+
+def apply_layer_decode(
+    p: dict,
+    spec: LayerSpec,
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    cache: tuple,
+    pos: jnp.ndarray,
+):
+    if spec.kind == "ssm":
+        state, conv = cache
+        h, state, conv = ssd_decode(p["ssm"], rms_norm(x, p["ln1"], cfg.norm_eps), state, conv, cfg)
+        return x + h, (state, conv)
+
+    h_in = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attention == "mla" and spec.kind in ("attn", "moe"):
+        ckv, krope = cache[:2]
+        h, ckv, krope = attn.mla_decode(p["attn"], h_in, ckv, krope, pos, cfg)
+        new_cache = (ckv, krope) + cache[2:]
+    else:
+        ck_, cv_ = cache[:2]
+        h, ck_, cv_ = attn.gqa_decode(p["attn"], h_in, ck_, cv_, pos, cfg, window=spec.window)
+        new_cache = (ck_, cv_) + cache[2:]
+    x = x + h
+    if spec.cross_attention:
+        enc_k, enc_v = cache[2], cache[3]
+        x = x + attn.cross_attend(
+            p["cross"], rms_norm(x, p["ln_x"], cfg.norm_eps), enc_k, enc_v, cfg
+        )
+    h2_in = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if spec.kind == "moe":
+        h2, _ = apply_moe(p["moe"], h2_in, cfg)
+    else:
+        h2 = apply_mlp(p["mlp"], h2_in)
+    return x + h2, new_cache
+
+
+# ----------------------------------------------------------------------------
+# segment machinery
+# ----------------------------------------------------------------------------
+
+
+def init_segments(
+    key: jax.Array, segments: list[tuple[list[LayerSpec], int]], cfg: ArchConfig, dtype
+) -> list[list[Any]]:
+    """Per segment: a list over unit positions of param trees stacked
+    over repeats (leading axis). ``shared_attn`` positions hold None
+    (their weights live in params['shared_attn'])."""
+    out = []
+    for si, (unit, reps) in enumerate(segments):
+        seg_params = []
+        for li, spec in enumerate(unit):
+            if spec.kind == "shared_attn":
+                seg_params.append(None)
+                continue
+            keys = jax.random.split(jax.random.fold_in(key, si * 97 + li), reps)
+            stacked = jax.vmap(lambda k: init_layer(k, spec, cfg, dtype))(keys)
+            seg_params.append(stacked)
+        out.append(seg_params)
+    return out
+
+
+def _scan_segment_full(
+    seg_params: list,
+    unit: list[LayerSpec],
+    reps: int,
+    cfg: ArchConfig,
+    shared_params: dict | None,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    enc_out: jnp.ndarray | None,
+    collect_cache: bool,
+):
+    """Scan one segment over its repeats (full-sequence mode)."""
+
+    def body(carry, xs):
+        h, aux = carry
+        if cfg.act_dp is not None:
+            h = jax.lax.with_sharding_constraint(
+                h, jax.sharding.PartitionSpec(cfg.act_dp, None, None)
+            )
+        caches = []
+        for li, spec in enumerate(unit):
+            if spec.kind == "shared_attn":
+                h2, cache, a = apply_layer_full(
+                    shared_params, LayerSpec(kind="attn"), cfg, h, positions, enc_out
+                )
+            else:
+                h2, cache, a = apply_layer_full(xs[li], spec, cfg, h, positions, enc_out)
+            h = h2
+            aux = aux + a
+            caches.append(cache if collect_cache else None)
+        return (h, aux), tuple(caches)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = tuple(seg_params)
+    (x, aux), caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs, length=reps,
+        unroll=reps if cfg.scan_unroll else 1,
+    )
+    return x, aux, caches
+
+
+def _scan_segment_decode(
+    seg_params: list,
+    unit: list[LayerSpec],
+    reps: int,
+    cfg: ArchConfig,
+    shared_params: dict | None,
+    x: jnp.ndarray,
+    seg_cache: tuple,
+    pos: jnp.ndarray,
+):
+    def body(h, xs):
+        params_and_cache = xs
+        new_caches = []
+        for li, spec in enumerate(unit):
+            p_li, c_li = params_and_cache[li]
+            if spec.kind == "shared_attn":
+                h, nc = apply_layer_decode(shared_params, LayerSpec(kind="attn"), cfg, h, c_li, pos)
+            else:
+                h, nc = apply_layer_decode(p_li, spec, cfg, h, c_li, pos)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    xs = tuple((seg_params[li], seg_cache[li]) for li in range(len(unit)))
+    x, new_cache = jax.lax.scan(
+        body, x, xs, length=reps, unroll=reps if cfg.scan_unroll else 1
+    )
+    return x, new_cache
+
+
+def forward_stack(
+    params_segments: list,
+    segments: list[tuple[list[LayerSpec], int]],
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    shared_params: dict | None = None,
+    enc_out: jnp.ndarray | None = None,
+    collect_cache: bool = False,
+):
+    """Full-sequence pass over all segments.
+
+    Returns (x, aux_total, caches) — caches is a list aligned with
+    segments (None entries when collect_cache=False).
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = []
+    for (unit, reps), seg_params in zip(segments, params_segments):
+        x, aux, cache = _scan_segment_full(
+            seg_params, unit, reps, cfg, shared_params, x, positions, enc_out, collect_cache
+        )
+        aux_total = aux_total + aux
+        caches.append(cache)
+    return x, aux_total, caches
+
+
+def decode_stack(
+    params_segments: list,
+    segments: list[tuple[list[LayerSpec], int]],
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    caches: list,
+    pos: jnp.ndarray,
+    shared_params: dict | None = None,
+):
+    new_caches = []
+    for (unit, reps), seg_params, seg_cache in zip(segments, params_segments, caches):
+        x, nc = _scan_segment_decode(
+            seg_params, unit, reps, cfg, shared_params, x, seg_cache, pos
+        )
+        new_caches.append(nc)
+    return x, new_caches

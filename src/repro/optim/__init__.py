@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamWConfig, init_opt_state, apply_updates
+from repro.optim.schedule import warmup_cosine
+
+__all__ = ["AdamWConfig", "init_opt_state", "apply_updates", "warmup_cosine"]

@@ -1,0 +1,67 @@
+"""Functional AdamW with configurable state dtype.
+
+``state_dtype="bfloat16"`` halves optimizer memory for the giant
+configs (deepseek-671b, grok-314b) — the dry-run reports both choices'
+bytes-per-device; DESIGN.md §5 discusses the trade-off.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"  # or "bfloat16"
+
+
+def _sdt(cfg: AdamWConfig):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.state_dtype]
+
+
+def init_opt_state(params: Any, cfg: AdamWConfig) -> dict:
+    dt = _sdt(cfg)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def apply_updates(
+    params: Any, grads: Any, state: dict, cfg: AdamWConfig, lr: jnp.ndarray | float | None = None
+) -> tuple[Any, dict]:
+    dt = _sdt(cfg)
+    step = state["step"] + 1
+    lr = cfg.lr if lr is None else lr
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu32 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g32
+        nu32 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        mhat = mu32 / b1c
+        nhat = nu32 / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu32.astype(dt), nu32.astype(dt)
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tree.unflatten([o[0] for o in out])
+    new_mu = tree.unflatten([o[1] for o in out])
+    new_nu = tree.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}

@@ -1,0 +1,321 @@
+"""Tests for the Sparrow boosting substrate: stumps, histogram edges,
+sampler, scanner, and the single-worker loop."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.boosting import (
+    BoosterConfig,
+    SparrowConfig,
+    SparrowWorker,
+    train_exact_greedy,
+    train_goss,
+)
+from repro.boosting.sampler import inclusion_counts, minimal_variance_sample, rejection_sample
+from repro.boosting.scanner import ScannerConfig
+from repro.boosting.stumps import (
+    alpha_from_gamma,
+    append_stump,
+    bin_features,
+    best_stump_exact,
+    edge_histogram,
+    edges_from_histogram,
+    empty_model,
+    error_rate,
+    exp_loss,
+    predict_margin,
+    predict_margin_delta,
+)
+from repro.core.simulator import SimulatorConfig, TMSNSimulator, WorkerSpec
+from repro.data.splice import SpliceConfig, make_splice_like, train_test_split
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    xb, y, _ = make_splice_like(SpliceConfig(n=20_000, d=16, num_bins=8, seed=3))
+    return train_test_split(xb, y)
+
+
+class TestStumps:
+    def test_empty_model_margin_zero(self):
+        m = empty_model(8)
+        xb = jnp.zeros((5, 3), jnp.int32)
+        assert jnp.all(predict_margin(m, xb) == 0.0)
+
+    def test_append_and_margin(self):
+        m = empty_model(8)
+        m = append_stump(m, 1, 2, 1.0, 0.5)
+        xb = jnp.array([[0, 3, 0], [0, 1, 0]], jnp.int32)
+        mg = predict_margin(m, xb)
+        np.testing.assert_allclose(np.asarray(mg), [0.5, -0.5])
+
+    def test_capacity_is_respected(self):
+        m = empty_model(2)
+        for k in range(5):
+            m = append_stump(m, k % 3, 0, 1.0, 1.0)
+        assert int(m.count) == 2
+
+    def test_margin_delta_matches_full(self):
+        key = jax.random.PRNGKey(0)
+        xb = jax.random.randint(key, (50, 6), 0, 8, dtype=jnp.int32)
+        m = empty_model(16)
+        mid_margin = None
+        for k in range(10):
+            m = append_stump(m, k % 6, k % 7, (-1.0) ** k, 0.1 * (k + 1))
+            if k == 4:
+                mid_margin = predict_margin(m, xb)
+        full = predict_margin(m, xb)
+        t_from = jnp.full((50,), 5, jnp.int32)
+        delta = predict_margin_delta(m, xb, t_from)
+        np.testing.assert_allclose(np.asarray(mid_margin + delta), np.asarray(full), rtol=1e-5)
+
+    def test_edge_histogram_matches_bruteforce(self):
+        key = jax.random.PRNGKey(1)
+        k1, k2 = jax.random.split(key)
+        xb = jax.random.randint(k1, (200, 5), 0, 6, dtype=jnp.int32)
+        wy = jax.random.normal(k2, (200,))
+        hist = edge_histogram(xb, wy, 6)
+        ref = np.zeros((5, 6), np.float32)
+        for i in range(200):
+            for j in range(5):
+                ref[j, int(xb[i, j])] += float(wy[i])
+        np.testing.assert_allclose(np.asarray(hist), ref, rtol=1e-4, atol=1e-4)
+
+    def test_edges_match_bruteforce(self):
+        key = jax.random.PRNGKey(2)
+        k1, k2, k3 = jax.random.split(key, 3)
+        xb = jax.random.randint(k1, (300, 4), 0, 5, dtype=jnp.int32)
+        y = jnp.where(jax.random.bernoulli(k2, 0.5, (300,)), 1.0, -1.0)
+        w = jax.random.uniform(k3, (300,)) + 0.1
+        edges = edges_from_histogram(edge_histogram(xb, w * y, 5))
+        for j in range(4):
+            for t in range(4):
+                h = jnp.where(xb[:, j] > t, 1.0, -1.0)
+                ref = float(jnp.sum(w * y * h))
+                assert float(edges[j, t]) == pytest.approx(ref, rel=1e-3, abs=1e-3)
+
+    def test_best_stump_exact_recovers_planted_rule(self):
+        key = jax.random.PRNGKey(4)
+        xb = jax.random.randint(key, (5000, 10), 0, 8, dtype=jnp.int32)
+        y = jnp.where(xb[:, 7] > 3, 1.0, -1.0)  # planted: feature 7, thr 3
+        w = jnp.ones(5000)
+        feat, thr, sign, gamma = best_stump_exact(xb, y, w, 8)
+        assert int(feat) == 7 and int(thr) == 3 and float(sign) == 1.0
+        assert float(gamma) == pytest.approx(0.5, abs=1e-5)
+
+    def test_alpha_from_gamma(self):
+        assert float(alpha_from_gamma(0.0)) == pytest.approx(0.0)
+        # err = 0.25 -> alpha = 0.5 log(3)
+        assert float(alpha_from_gamma(0.25)) == pytest.approx(0.5 * np.log(3.0), rel=1e-5)
+
+    def test_bin_features_monotone(self):
+        x = jnp.linspace(-1, 1, 100)[:, None]
+        bins, cuts = bin_features(x, 4)
+        b = np.asarray(bins[:, 0])
+        assert (np.diff(b) >= 0).all() and b.min() == 0 and b.max() == 3
+
+
+class TestSampler:
+    def test_minimal_variance_counts(self):
+        """Inclusion counts must be floor/ceil of the expectation."""
+        key = jax.random.PRNGKey(0)
+        w = jnp.asarray([4.0, 2.0, 1.0, 1.0])
+        m = 8
+        idx = minimal_variance_sample(key, w, m)
+        counts = np.asarray(inclusion_counts(idx, 4))
+        expect = np.asarray(w) / 8.0 * m
+        assert (counts >= np.floor(expect)).all()
+        assert (counts <= np.ceil(expect)).all()
+
+    def test_zero_weights_never_selected(self):
+        key = jax.random.PRNGKey(1)
+        w = jnp.asarray([1.0, 0.0, 1.0, 0.0])
+        idx = np.asarray(minimal_variance_sample(key, w, 100))
+        assert set(idx.tolist()) <= {0, 2}
+
+    def test_uniform_fallback_on_all_zero(self):
+        key = jax.random.PRNGKey(2)
+        idx = np.asarray(minimal_variance_sample(key, jnp.zeros(10), 20))
+        assert (idx >= 0).all() and (idx <= 9).all()
+
+    def test_rejection_sample_unbiased(self):
+        key = jax.random.PRNGKey(3)
+        w = jnp.asarray([3.0, 1.0])
+        idx = np.asarray(rejection_sample(key, w, 4000))
+        frac0 = (idx == 0).mean()
+        assert frac0 == pytest.approx(0.75, abs=0.03)
+
+    if HAVE_HYPOTHESIS:
+
+        @settings(deadline=None, max_examples=25)
+        @given(
+            st.lists(st.floats(min_value=0.0, max_value=100.0), min_size=2, max_size=32),
+            st.integers(min_value=1, max_value=64),
+        )
+        def test_mvs_count_property(self, ws, m):
+            """Minimal-variance property: count_i in {floor, ceil}(m*p_i)."""
+            w = jnp.asarray(ws, jnp.float32)
+            if float(jnp.sum(w)) <= 0:
+                return
+            idx = minimal_variance_sample(jax.random.PRNGKey(0), w, m)
+            counts = np.asarray(inclusion_counts(idx, len(ws)))
+            p = np.asarray(w) / float(jnp.sum(w))
+            expect = p * m
+            assert (counts >= np.floor(expect) - 1e-6).all()
+            assert (counts <= np.ceil(expect) + 1e-6).all()
+
+
+class TestBaselines:
+    def test_exact_greedy_drives_loss_down(self, small_data):
+        xtr, ytr, xte, yte = small_data
+        tr = train_exact_greedy(
+            xtr, ytr, BoosterConfig(num_rounds=20, num_bins=8, eval_every=19),
+            eval_fn=lambda m: float(exp_loss(m, xte, yte)),
+        )
+        assert tr.metric[-1] < 0.8  # well below the trivial 1.0
+
+    def test_goss_drives_loss_down(self, small_data):
+        xtr, ytr, xte, yte = small_data
+        tr = train_goss(
+            xtr, ytr, BoosterConfig(num_rounds=20, num_bins=8, eval_every=19),
+            eval_fn=lambda m: float(exp_loss(m, xte, yte)),
+        )
+        assert tr.metric[-1] < 0.85
+
+    def test_goss_costs_less_per_round(self, small_data):
+        xtr, ytr, xte, yte = small_data
+        cfg = BoosterConfig(num_rounds=10, num_bins=8, eval_every=9)
+        a = train_exact_greedy(xtr, ytr, cfg, eval_fn=lambda m: 0.0)
+        b = train_goss(xtr, ytr, cfg, eval_fn=lambda m: 0.0)
+        assert b.cost[-1] < a.cost[-1]
+
+    def test_boosting_separable_reaches_zero_error(self):
+        """AdaBoost oracle property: on separable data driven by a single
+        stump, training error hits 0 fast."""
+        key = jax.random.PRNGKey(9)
+        xb = jax.random.randint(key, (2000, 4), 0, 8, dtype=jnp.int32)
+        y = jnp.where(xb[:, 2] > 4, 1.0, -1.0)
+        tr = train_exact_greedy(xb, y, BoosterConfig(num_rounds=3, num_bins=8, eval_every=2))
+        assert float(error_rate(tr.model, xb, y)) == 0.0
+
+
+class TestSparrowWorker:
+    def test_single_worker_learns(self, small_data):
+        xtr, ytr, xte, yte = small_data
+        cfg = SparrowConfig(
+            sample_size=2048, capacity=64,
+            scanner=ScannerConfig(chunk_size=512, num_bins=8, gamma0=0.25),
+            n_workers=1,
+        )
+        worker = SparrowWorker(xtr, ytr, cfg)
+        sim = TMSNSimulator(
+            worker, [WorkerSpec()], SimulatorConfig(n_workers=1, max_events=600)
+        )
+        res = sim.run()
+        model = res.final_models[0]
+        assert int(model.count) > 5
+        assert float(exp_loss(model, xte, yte)) < 0.9
+        # certificate is monotone within the worker
+        certs = [c for _, _, c in res.history]
+        assert all(b <= a + 1e-9 for a, b in zip(certs, certs[1:]))
+
+    def test_certificate_is_sound_upper_bound(self, small_data):
+        """exp(cert) must upper-bound the TRAIN potential w.h.p. — the
+        heart of TMSN: certificates must be sound."""
+        xtr, ytr, xte, yte = small_data
+        cfg = SparrowConfig(
+            sample_size=2048, capacity=64,
+            scanner=ScannerConfig(chunk_size=512, num_bins=8, gamma0=0.25),
+        )
+        worker = SparrowWorker(xtr, ytr, cfg)
+        sim = TMSNSimulator(worker, [WorkerSpec()], SimulatorConfig(n_workers=1, max_events=400))
+        res = sim.run()
+        model = res.final_models[0]
+        train_potential = float(exp_loss(model, xtr, ytr))
+        assert train_potential <= float(np.exp(res.final_certificates[0])) * 1.05
+
+    def test_resampling_triggers(self, small_data):
+        xtr, ytr, _, _ = small_data
+        cfg = SparrowConfig(
+            sample_size=1024, capacity=64,
+            scanner=ScannerConfig(chunk_size=512, num_bins=8, gamma0=0.25),
+            ess_threshold=0.5,  # aggressive -> must resample
+        )
+        worker = SparrowWorker(xtr, ytr, cfg)
+        state = worker.init_state(0, 0)
+        resamples = 0
+        for _ in range(300):
+            state, _, _ = worker.run_segment(state)
+            resamples = state.resamples
+        assert resamples >= 1
+
+    def test_feature_partition_covers_all(self):
+        xb = jnp.zeros((100, 10), jnp.int32)
+        y = jnp.ones((100,))
+        cfg = SparrowConfig(sample_size=64, n_workers=3)
+        w = SparrowWorker(xb, y, cfg)
+        masks = np.stack([np.asarray(w.feature_mask(i)) for i in range(3)])
+        assert (masks.sum(axis=0) == 1).all()  # disjoint cover
+
+
+class TestTMSNMultiWorker:
+    def test_workers_converge_to_same_certificate(self, small_data):
+        xtr, ytr, _, _ = small_data
+        nw = 3
+        cfg = SparrowConfig(
+            sample_size=1024, capacity=64,
+            scanner=ScannerConfig(chunk_size=512, num_bins=8, gamma0=0.25),
+            n_workers=nw,
+        )
+        worker = SparrowWorker(xtr, ytr, cfg)
+        sim = TMSNSimulator(
+            worker,
+            [WorkerSpec() for _ in range(nw)],
+            SimulatorConfig(n_workers=nw, max_events=900),
+        )
+        res = sim.run()
+        assert res.messages_sent > 0 and res.messages_accepted > 0
+        certs = res.final_certificates
+        assert max(certs) - min(certs) < 0.05  # all near-identical
+
+    def test_laggard_does_not_stall(self, small_data):
+        """A 100x slower worker must not prevent the fast workers from
+        making progress (the paper's resilience claim)."""
+        xtr, ytr, _, _ = small_data
+        nw = 3
+        cfg = SparrowConfig(
+            sample_size=1024, capacity=64,
+            scanner=ScannerConfig(chunk_size=512, num_bins=8, gamma0=0.25),
+            n_workers=nw,
+        )
+        worker = SparrowWorker(xtr, ytr, cfg)
+        specs = [WorkerSpec(speed=1.0), WorkerSpec(speed=1.0), WorkerSpec(speed=0.01)]
+        sim = TMSNSimulator(
+            worker, specs, SimulatorConfig(n_workers=nw, max_events=900)
+        )
+        res = sim.run()
+        fast_certs = [res.final_certificates[0], res.final_certificates[1]]
+        assert min(fast_certs) < -0.01  # fast workers progressed
+
+    def test_failed_worker_does_not_poison(self, small_data):
+        xtr, ytr, _, _ = small_data
+        nw = 3
+        cfg = SparrowConfig(
+            sample_size=1024, capacity=64,
+            scanner=ScannerConfig(chunk_size=512, num_bins=8, gamma0=0.25),
+            n_workers=nw,
+        )
+        worker = SparrowWorker(xtr, ytr, cfg)
+        specs = [WorkerSpec(), WorkerSpec(), WorkerSpec(fail_at=1000.0)]
+        sim = TMSNSimulator(worker, specs, SimulatorConfig(n_workers=nw, max_events=900))
+        res = sim.run()
+        assert min(res.final_certificates[:2]) < -0.01

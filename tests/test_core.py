@@ -1,0 +1,166 @@
+"""Unit + property tests for the TMSN core (stopping rule, ESS, protocol)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    StoppingRuleParams,
+    accepts,
+    effective_sample_size,
+    improves,
+    stopping_rule_fires,
+    stopping_threshold,
+)
+from repro.core.ess import expected_sample_fraction
+from repro.core.stopping import hoeffding_threshold
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+class TestESS:
+    def test_uniform_weights(self):
+        w = jnp.ones(100)
+        assert float(effective_sample_size(w)) == pytest.approx(100.0)
+
+    def test_k_of_n(self):
+        # paper's motivating example: k weight-1 examples among zeros
+        w = jnp.concatenate([jnp.ones(10), jnp.zeros(90)])
+        assert float(effective_sample_size(w)) == pytest.approx(10.0)
+
+    def test_scale_invariance(self):
+        w = jnp.array([0.5, 1.5, 2.0, 0.1])
+        a = float(effective_sample_size(w))
+        b = float(effective_sample_size(w * 37.0))
+        assert a == pytest.approx(b, rel=1e-5)
+
+    def test_all_zero(self):
+        assert float(effective_sample_size(jnp.zeros(5))) == 0.0
+
+    if HAVE_HYPOTHESIS:
+
+        @settings(deadline=None, max_examples=50)
+        @given(
+            st.lists(st.floats(min_value=0.0, max_value=1e3), min_size=1, max_size=64)
+        )
+        def test_bounds(self, ws):
+            """1 <= n_eff <= n for any nonneg weights with some mass."""
+            w = jnp.asarray(ws, jnp.float32)
+            ess = float(effective_sample_size(w))
+            if float(jnp.sum(w)) > 0:
+                assert 1.0 - 1e-3 <= ess <= len(ws) + 1e-3
+            else:
+                assert ess == 0.0
+
+    def test_expected_sample_fraction(self):
+        w = jnp.array([1.0, 1.0, 2.0])
+        assert float(expected_sample_fraction(w)) == pytest.approx((4 / 3) / 2)
+
+
+class TestStoppingRule:
+    def test_no_evidence_never_fires(self):
+        p = StoppingRuleParams()
+        thr = stopping_threshold(jnp.asarray(0.0), jnp.asarray(0.0), p)
+        assert not np.isfinite(float(thr))
+
+    def test_strong_edge_fires(self):
+        # perfect rule: m = W after many unit-weight examples
+        p = StoppingRuleParams(C=1.0, delta=1e-6)
+        n = 2000.0
+        fires, signs, _ = stopping_rule_fires(
+            jnp.asarray([n]), jnp.asarray(n), jnp.asarray(n), 0.1, p
+        )
+        assert bool(fires[0]) and float(signs[0]) == 1.0
+
+    def test_negated_rule_fires_negative(self):
+        p = StoppingRuleParams()
+        n = 2000.0
+        fires, signs, _ = stopping_rule_fires(
+            jnp.asarray([-n]), jnp.asarray(n), jnp.asarray(n), 0.1, p
+        )
+        assert bool(fires[0]) and float(signs[0]) == -1.0
+
+    def test_zero_edge_does_not_fire(self):
+        p = StoppingRuleParams()
+        fires, _, _ = stopping_rule_fires(
+            jnp.asarray([0.0]), jnp.asarray(1000.0), jnp.asarray(1000.0), 0.0, p
+        )
+        assert not bool(fires[0])
+
+    def test_soundness_monte_carlo(self):
+        """Under the null (true edge = 0), the rule should essentially
+        never certify an edge > gamma. Empirical false-fire rate over
+        random walks must be small."""
+        rng = np.random.default_rng(0)
+        p = StoppingRuleParams(C=1.0, delta=1e-3)
+        n_trials, horizon, gamma = 200, 4000, 0.05
+        false_fires = 0
+        for _ in range(n_trials):
+            x = rng.choice([-1.0, 1.0], size=horizon)  # unit weights, zero edge
+            m = np.cumsum(x)
+            W = np.arange(1, horizon + 1, dtype=np.float64)
+            V = W.copy()
+            M = m - 2 * gamma * W
+            thr = np.asarray(
+                stopping_threshold(jnp.asarray(V, jnp.float32), jnp.asarray(M, jnp.float32), p)
+            )
+            # only a fire on the POSITIVE side is a false certification
+            if np.any(M > thr):
+                false_fires += 1
+        assert false_fires <= 10  # <= 5% empirically (delta=1e-3 nominal)
+
+    def test_tightness_vs_hoeffding(self):
+        """The iterated-log rule should be tighter than the union-bound
+        Hoeffding rule at large t (the reason the paper uses it)."""
+        p = StoppingRuleParams(C=1.0, delta=1e-6)
+        V = jnp.asarray(1e6)
+        t = jnp.asarray(1e6)
+        il = float(stopping_threshold(V, jnp.asarray(1000.0), p))
+        hf = float(hoeffding_threshold(V, t, p))
+        assert il < hf
+
+    def test_true_edge_fires_within_sample_budget(self):
+        """A rule with true edge 2*gamma fires well before n ~ 1/gamma^2 * log."""
+        rng = np.random.default_rng(1)
+        p = StoppingRuleParams(C=1.0, delta=1e-3)
+        gamma = 0.1  # correlation 0.4
+        horizon = 40000
+        x = rng.choice([-1.0, 1.0], p=[0.3, 0.7], size=horizon)  # correlation 0.4
+        m = np.cumsum(x)
+        W = np.arange(1, horizon + 1, dtype=np.float64)
+        M = m - 2 * gamma * W
+        thr = np.asarray(
+            stopping_threshold(jnp.asarray(W, jnp.float32), jnp.asarray(M, jnp.float32), p)
+        )
+        fire_at = np.argmax(M > thr)
+        assert M[fire_at] > thr[fire_at]
+        assert fire_at < horizon / 4  # fires early, not at the bitter end
+
+
+class TestProtocol:
+    def test_improves_gap(self):
+        assert improves(1.0, 0.8, 0.1)
+        assert not improves(1.0, 0.95, 0.1)
+        assert not improves(1.0, 1.2, 0.0)
+
+    def test_accepts_is_strict_gap(self):
+        assert accepts(0.5, 0.3, 0.1)
+        assert not accepts(0.5, 0.45, 0.1)
+        # never accept an equal-or-worse certificate
+        assert not accepts(0.5, 0.5, 0.0)
+
+    def test_monotone_descent_invariant(self):
+        """Interleaving improves/accepts can only lower a certificate."""
+        rng = np.random.default_rng(2)
+        local = 1.0
+        for _ in range(1000):
+            incoming = float(rng.uniform(0, 2))
+            if accepts(local, incoming, 0.05):
+                assert incoming < local
+                local = incoming

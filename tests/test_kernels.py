@@ -1,0 +1,134 @@
+"""Per-kernel shape/dtype sweeps asserting allclose vs the ref.py
+oracles (kernels run in interpret mode on CPU; TPU is the target)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.boosting.stumps import append_stump, empty_model
+from repro.kernels import ops
+from repro.kernels.ref import edge_scan_ref, margin_delta_oracle, weight_update_ref
+from repro.kernels.weight_update import scatter_model_slice
+
+
+def _rand_inputs(key, n, d, num_bins, wdtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    xb = jax.random.randint(k1, (n, d), 0, num_bins, dtype=jnp.int32)
+    w = (jax.random.uniform(k2, (n,)) + 0.05).astype(wdtype)
+    y = jnp.where(jax.random.bernoulli(k3, 0.5, (n,)), 1.0, -1.0).astype(wdtype)
+    return xb, w, y
+
+
+class TestEdgeScanKernel:
+    @pytest.mark.parametrize("n", [1, 7, 512, 513, 2048])
+    @pytest.mark.parametrize("d,num_bins", [(4, 8), (16, 16), (33, 5)])
+    def test_matches_ref(self, n, d, num_bins):
+        key = jax.random.PRNGKey(n * 131 + d)
+        xb, w, y = _rand_inputs(key, n, d, num_bins, jnp.float32)
+        wy = w * y
+        hist, W, V, T = ops.edge_scan(xb, wy, w, num_bins=num_bins, tile_n=256, interpret=True)
+        rh, rW, rV, rT = edge_scan_ref(xb, wy, w, num_bins)
+        np.testing.assert_allclose(np.asarray(hist), np.asarray(rh), rtol=1e-5, atol=1e-5)
+        assert float(W) == pytest.approx(float(rW), rel=1e-5)
+        assert float(V) == pytest.approx(float(rV), rel=1e-5)
+        assert float(T) == pytest.approx(float(rT), rel=1e-4, abs=1e-3)
+
+    @pytest.mark.parametrize("wdtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, wdtype):
+        key = jax.random.PRNGKey(0)
+        xb, w, y = _rand_inputs(key, 300, 8, 8, wdtype)
+        wy = (w * y).astype(jnp.float32)
+        w32 = w.astype(jnp.float32)
+        hist, W, V, T = ops.edge_scan(xb, wy, w32, num_bins=8, interpret=True)
+        rh, *_ = edge_scan_ref(xb, wy, w32, 8)
+        tol = 1e-2 if wdtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(np.asarray(hist), np.asarray(rh), rtol=tol, atol=tol)
+
+    def test_tile_size_invariance(self):
+        key = jax.random.PRNGKey(5)
+        xb, w, y = _rand_inputs(key, 1000, 12, 8, jnp.float32)
+        wy = w * y
+        out128 = ops.edge_scan(xb, wy, w, num_bins=8, tile_n=128, interpret=True)
+        out512 = ops.edge_scan(xb, wy, w, num_bins=8, tile_n=512, interpret=True)
+        np.testing.assert_allclose(np.asarray(out128[0]), np.asarray(out512[0]), rtol=1e-5)
+
+    def test_padding_rows_do_not_leak(self):
+        """n not a multiple of tile_n: padded rows must contribute zero."""
+        key = jax.random.PRNGKey(6)
+        xb, w, y = _rand_inputs(key, 100, 4, 8, jnp.float32)
+        wy = w * y
+        hist, W, V, T = ops.edge_scan(xb, wy, w, num_bins=8, tile_n=64, interpret=True)
+        rh, rW, _, _ = edge_scan_ref(xb, wy, w, 8)
+        np.testing.assert_allclose(np.asarray(hist), np.asarray(rh), rtol=1e-5, atol=1e-5)
+        assert float(W) == pytest.approx(float(rW), rel=1e-5)
+
+
+class TestWeightUpdateKernel:
+    @pytest.mark.parametrize("n", [5, 512, 777])
+    @pytest.mark.parametrize("d,num_bins", [(8, 8), (16, 32)])
+    def test_matches_ref(self, n, d, num_bins):
+        key = jax.random.PRNGKey(n + d)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        xb = jax.random.randint(k1, (n, d), 0, num_bins, dtype=jnp.int32)
+        y = jnp.where(jax.random.bernoulli(k2, 0.5, (n,)), 1.0, -1.0)
+        ml = jax.random.normal(k3, (n,)) * 0.5
+        ms = jax.random.normal(k4, (n,)) * 0.5
+        a = jax.random.normal(key, (d, num_bins - 1)) * 0.1
+        c = jnp.sum(a) * 0.3
+        m_new, w = ops.weight_update(
+            xb, y, ml, ms, a, c, num_bins=num_bins, tile_n=256, interpret=True
+        )
+        rm, rw = weight_update_ref(xb, y, ml, ms, a, c, num_bins)
+        np.testing.assert_allclose(np.asarray(m_new), np.asarray(rm), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(w), np.asarray(rw), rtol=1e-4, atol=1e-5)
+
+    def test_scatter_slice_semantics(self):
+        """scatter_model_slice + kernel == stump-by-stump margin delta."""
+        d, num_bins, n = 6, 8, 64
+        key = jax.random.PRNGKey(7)
+        xb = jax.random.randint(key, (n, d), 0, num_bins, dtype=jnp.int32)
+        model = empty_model(16)
+        rng = np.random.default_rng(0)
+        for k in range(10):
+            model = append_stump(
+                model,
+                int(rng.integers(0, d)),
+                int(rng.integers(0, num_bins - 1)),
+                float(rng.choice([-1.0, 1.0])),
+                float(rng.uniform(0.1, 1.0)),
+            )
+        t_lo, t_hi = 3, 10
+        a, c = scatter_model_slice(model, t_lo, t_hi, num_bins, d)
+        y = jnp.ones((n,))
+        zeros = jnp.zeros((n,))
+        m_new, _ = ops.weight_update(xb, y, zeros, zeros, a, c, num_bins=num_bins, interpret=True)
+        oracle = margin_delta_oracle(model, xb, t_lo, t_hi)
+        np.testing.assert_allclose(np.asarray(m_new), np.asarray(oracle), rtol=1e-4, atol=1e-5)
+
+    def test_weight_clipping(self):
+        """Extreme margins must not produce inf/nan."""
+        xb = jnp.zeros((4, 2), jnp.int32)
+        y = jnp.asarray([1.0, -1.0, 1.0, -1.0])
+        ml = jnp.asarray([100.0, -100.0, 0.0, 0.0])
+        ms = jnp.zeros((4,))
+        a = jnp.zeros((2, 7))
+        m_new, w = ops.weight_update(xb, y, ml, ms, a, 0.0, num_bins=8, interpret=True)
+        assert np.isfinite(np.asarray(w)).all()
+
+
+class TestKernelScannerEquivalence:
+    def test_edge_scan_reproduces_scanner_histogram(self):
+        """The kernel path and the scanner's pure-jnp path agree on the
+        quantities the stopping rule consumes."""
+        from repro.boosting.stumps import edge_histogram, edges_from_histogram
+
+        key = jax.random.PRNGKey(8)
+        xb, w, y = _rand_inputs(key, 600, 10, 8, jnp.float32)
+        wy = w * y
+        hist_k, W, V, T = ops.edge_scan(xb, wy, w, num_bins=8, interpret=True)
+        hist_j = edge_histogram(xb, wy, 8)
+        np.testing.assert_allclose(np.asarray(hist_k), np.asarray(hist_j), rtol=1e-5, atol=1e-5)
+        ek = edges_from_histogram(hist_k)
+        ej = edges_from_histogram(hist_j)
+        np.testing.assert_allclose(np.asarray(ek), np.asarray(ej), rtol=1e-5, atol=1e-5)

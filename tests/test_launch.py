@@ -1,0 +1,216 @@
+"""Launch-layer tests: sharding rules, step functions on the host mesh,
+TMSN-SGD round, optimizer, checkpoint, input specs."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import get_config, reduced
+from repro.core.tmsn_sgd import TMSNSGDConfig, init_tmsn_state, make_tmsn_round, tmsn_batch_specs
+from repro.data.tokens import TokenPipeline, synthetic_token_batch
+from repro.launch.sharding import fit_spec, param_pspecs
+from repro.launch.steps import (
+    INPUT_SHAPES,
+    batch_specs,
+    decode_specs,
+    make_serve_step,
+    make_train_step,
+    shape_applicable,
+)
+from repro.models import init_params
+from repro.optim import AdamWConfig, apply_updates, init_opt_state, warmup_cosine
+
+
+class TestShardingRules:
+    def test_fit_spec_drops_nondivisible(self):
+        sizes = {"data": 16, "model": 16}
+        assert fit_spec(P("model", "data"), (50280, 2048), sizes) == P(None, "data")
+        assert fit_spec(P("data", "model"), (4096, 11008), sizes) == P("data", "model")
+        assert fit_spec(P(("pod", "data"), None), (32, 128), {"pod": 2, "data": 16, "model": 16}) == P(("pod", "data"), None)
+        assert fit_spec(P(("pod", "data"), None), (31, 128), {"pod": 2, "data": 16, "model": 16}) == P(None, None)
+
+    def test_param_pspecs_cover_all_archs(self):
+        for arch in ("yi-9b", "deepseek-v3-671b", "mamba2-1.3b", "zamba2-1.2b", "whisper-large-v3"):
+            cfg = get_config(arch)
+            shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+            specs = param_pspecs(shapes, cfg)
+            flat_shapes = jax.tree.leaves(shapes)
+            flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+            assert len(flat_shapes) == len(flat_specs)
+            for sh, sp in zip(flat_shapes, flat_specs):
+                assert len(sp) <= len(sh.shape), (arch, sh.shape, sp)
+
+    def test_serve_mode_drops_fsdp_for_2d(self):
+        cfg = get_config("yi-9b")
+        shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+        train = param_pspecs(shapes, cfg, mode="train")
+        serve = param_pspecs(shapes, cfg, mode="serve")
+        t = jax.tree.leaves(train, is_leaf=lambda x: isinstance(x, P))
+        s = jax.tree.leaves(serve, is_leaf=lambda x: isinstance(x, P))
+        assert any("data" in tuple(x) for x in t)
+        # 2D serve specs never use the fsdp axis
+        assert all("data" not in tuple(x) for x in s)
+
+
+class TestInputSpecs:
+    def test_all_shapes_defined(self):
+        assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+
+    def test_batch_specs_shapes(self):
+        cfg = get_config("yi-9b")
+        b = batch_specs(cfg, "train_4k")
+        assert b["tokens"].shape == (256, 4096)
+        b = batch_specs(cfg, "prefill_32k")
+        assert b["tokens"].shape == (32, 32768)
+
+    def test_decode_specs_cache_rank(self):
+        cfg = get_config("gemma3-12b")
+        d = decode_specs(cfg, "decode_32k")
+        assert d["token"].shape == (128, 1)
+        leaves = jax.tree.leaves(d["caches"])
+        assert all(l.shape[2] == 32768 for l in leaves if len(l.shape) == 5)
+
+    def test_long_500k_applicability(self):
+        assert shape_applicable(get_config("mamba2-1.3b"), "long_500k")[0]
+        assert shape_applicable(get_config("gemma3-12b"), "long_500k")[0]
+        assert shape_applicable(get_config("zamba2-1.2b"), "long_500k")[0]
+        ok, why = shape_applicable(get_config("yi-9b"), "long_500k")
+        assert not ok and "full-attention" in why
+
+    def test_frontend_specs_present(self):
+        cfg = get_config("whisper-large-v3")
+        b = batch_specs(cfg, "train_4k")
+        assert b["frontend_embeds"].shape == (256, 1500, 128)
+
+
+class TestStepsOnHost:
+    def test_train_step_runs_and_descends(self):
+        cfg = reduced(get_config("starcoder2-7b"))
+        opt_cfg = AdamWConfig(lr=1e-3)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = init_opt_state(params, opt_cfg)
+        step = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+        key = jax.random.PRNGKey(1)
+        losses = []
+        for i in range(8):
+            batch = synthetic_token_batch(jax.random.fold_in(key, i), 4, 64, cfg.vocab)
+            params, opt, m = step(params, opt, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]  # learns the token marginals
+
+    def test_serve_step_runs(self):
+        from repro.models import init_cache
+
+        cfg = reduced(get_config("internlm2-20b"))
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        serve = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
+        caches = init_cache(cfg, 2, 16)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        for i in range(4):
+            tok, caches = serve(params, tok, caches, jnp.asarray(i, jnp.int32))
+        assert tok.shape == (2, 1)
+        assert int(tok.max()) < cfg.vocab
+
+
+class TestTMSNSGD:
+    def test_round_improves_and_certs_monotone(self):
+        cfg = reduced(get_config("yi-9b"))
+        opt_cfg = AdamWConfig(lr=1e-3)
+        tcfg = TMSNSGDConfig(num_workers=2, local_steps=2, eps=0.0)
+        params_w, opt_w, cert_w = init_tmsn_state(cfg, opt_cfg, tcfg, jax.random.PRNGKey(0))
+        fn = jax.jit(make_tmsn_round(cfg, opt_cfg, tcfg), donate_argnums=(0, 1))
+        key = jax.random.PRNGKey(1)
+        certs_hist = []
+        losses = []
+        for r in range(4):
+            batch = synthetic_token_batch(jax.random.fold_in(key, r), 2 * 2 * 2, 32, cfg.vocab)
+            batch_w = {k: v.reshape((2, 2, 2) + v.shape[1:]) for k, v in batch.items()}
+            params_w, opt_w, cert_w, loss = fn(params_w, opt_w, cert_w, batch_w)
+            losses.append(float(loss))
+            certs_hist.append(np.asarray(cert_w).copy())
+        assert losses[-1] < losses[0]
+        for a, b in zip(certs_hist[1:], certs_hist[2:]):
+            assert (b <= a + 1e-2).all()
+
+    def test_adoption_copies_winner(self):
+        """With a huge eps nothing is adopted; with eps=-inf everything
+        adopts the winner -> all workers identical afterwards."""
+        cfg = reduced(get_config("yi-9b"))
+        opt_cfg = AdamWConfig(lr=1e-3)
+        key = jax.random.PRNGKey(0)
+        for eps, expect_same in ((1e9, False), (-1e9, True)):
+            tcfg = TMSNSGDConfig(num_workers=2, local_steps=1, eps=eps)
+            params_w, opt_w, cert_w = init_tmsn_state(cfg, opt_cfg, tcfg, key)
+            fn = jax.jit(make_tmsn_round(cfg, opt_cfg, tcfg))
+            batch = synthetic_token_batch(key, 2 * 1 * 2, 32, cfg.vocab)
+            batch_w = {k: v.reshape((2, 1, 2) + v.shape[1:]) for k, v in batch.items()}
+            params_w, opt_w, cert_w, _ = fn(params_w, opt_w, cert_w, batch_w)
+            emb = np.asarray(params_w["embed"])
+            same = bool(np.allclose(emb[0], emb[1]))
+            assert same == expect_same
+
+    def test_batch_specs(self):
+        cfg = get_config("yi-9b")
+        tcfg = TMSNSGDConfig(num_workers=16, local_steps=4)
+        spec = tmsn_batch_specs(cfg, tcfg, 4096, 256)
+        assert spec["tokens"].shape == (16, 4, 16, 4096)
+
+
+class TestOptim:
+    def test_adamw_moves_toward_minimum(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        state = init_opt_state(params, cfg)
+        for _ in range(60):
+            grads = {"w": 2 * params["w"]}  # d/dw ||w||^2
+            params, state = apply_updates(params, grads, state, cfg)
+        assert float(jnp.abs(params["w"]).max()) < 1.0
+
+    def test_bf16_state_dtype(self):
+        cfg = AdamWConfig(state_dtype="bfloat16")
+        params = {"w": jnp.ones((4,), jnp.float32)}
+        state = init_opt_state(params, cfg)
+        assert state["mu"]["w"].dtype == jnp.bfloat16
+
+    def test_warmup_cosine(self):
+        assert float(warmup_cosine(0, 1.0, 10, 100)) == 0.0
+        assert float(warmup_cosine(10, 1.0, 10, 100)) == pytest.approx(1.0)
+        assert float(warmup_cosine(100, 1.0, 10, 100)) == pytest.approx(0.1, abs=1e-5)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        cfg = reduced(get_config("mamba2-1.3b"))
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        path = str(tmp_path / "ckpt.npz")
+        save_checkpoint(path, params)
+        restored = load_checkpoint(path, params)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        path = str(tmp_path / "c.npz")
+        save_checkpoint(path, {"w": jnp.ones((2,))})
+        with pytest.raises(ValueError):
+            load_checkpoint(path, {"w": jnp.ones((3,))})
+
+
+class TestPipeline:
+    def test_token_pipeline_deterministic(self):
+        p1 = list(zip(range(2), TokenPipeline(batch=2, seq=8, vocab=100, seed=3)))
+        p2 = list(zip(range(2), TokenPipeline(batch=2, seq=8, vocab=100, seed=3)))
+        for (_, a), (_, b) in zip(p1, p2):
+            np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+    def test_element_spec_matches(self):
+        p = TokenPipeline(batch=2, seq=8, vocab=100, frontend_len=4, frontend_dim=8)
+        spec = p.element_spec()
+        batch = next(iter(p))
+        for k, v in spec.items():
+            assert batch[k].shape == v.shape and batch[k].dtype == v.dtype

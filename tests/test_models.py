@@ -1,0 +1,211 @@
+"""Model zoo tests: per-arch smoke (reduced variants), SSD vs recurrence
+oracle, prefill/decode consistency, MoE dispatch invariants, full-config
+parameter counts via eval_shape (no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, all_configs, get_config, reduced
+from repro.data.tokens import synthetic_token_batch
+from repro.models import (
+    decode_step,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_count,
+    prefill,
+)
+from repro.models.config import layer_segments, validate
+from repro.models.moe import apply_moe, init_moe, moe_capacity
+from repro.models.ssm import init_ssm, ssd_full, ssd_reference
+
+
+def _batch_for(cfg, key, b=2, s=64):
+    batch = synthetic_token_batch(key, b, s, cfg.vocab)
+    if cfg.frontend:
+        k2 = jax.random.fold_in(key, 1)
+        batch["frontend_embeds"] = (
+            jax.random.normal(k2, (b, cfg.frontend_len, cfg.frontend_dim)) * 0.02
+        )
+    return batch
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+class TestConfigs:
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_validate_and_segments(self, arch):
+        cfg = get_config(arch)
+        validate(cfg)
+        segs = layer_segments(cfg)
+        n = sum(reps * sum(1 for s in unit if s.kind != "shared_attn") for unit, reps in segs)
+        assert n == cfg.num_layers
+
+    def test_full_param_counts_match_model_cards(self):
+        """eval_shape the FULL configs (no allocation) and check total
+        parameter counts are in the right ballpark of the model cards."""
+        expected = {  # (low, high) in billions
+            "yi_9b": (8.0, 10.0),
+            "starcoder2_7b": (6.0, 8.5),
+            "internlm2_20b": (17.0, 22.0),
+            "deepseek_v3_671b": (600.0, 720.0),
+            "grok1_314b": (280.0, 340.0),
+            "gemma3_12b": (10.0, 14.0),
+            "mamba2_1p3b": (1.0, 1.6),
+            "phi3_vision_4p2b": (3.5, 4.5),
+            "whisper_large_v3": (1.2, 2.0),
+            "zamba2_1p2b": (1.0, 1.6),
+        }
+        for arch, (lo, hi) in expected.items():
+            cfg = get_config(arch)
+            shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+            total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes)) / 1e9
+            assert lo <= total <= hi, f"{arch}: {total:.2f}B not in [{lo},{hi}]"
+
+
+class TestSmokeAllArchs:
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_reduced_train_step(self, arch, key):
+        """One forward+backward on the reduced variant: finite loss,
+        finite grads, correct logit shapes."""
+        cfg = reduced(get_config(arch))
+        params = init_params(cfg, key)
+        batch = _batch_for(cfg, key)
+
+        def loss_only(p):
+            return loss_fn(p, cfg, batch)[0]
+
+        loss, grads = jax.jit(jax.value_and_grad(loss_only))(params)
+        assert np.isfinite(float(loss))
+        leaves = jax.tree.leaves(grads)
+        assert all(np.isfinite(np.asarray(g)).all() for g in leaves)
+
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_reduced_decode_shapes(self, arch, key):
+        cfg = reduced(get_config(arch))
+        params = init_params(cfg, key)
+        b, s_max = 2, 32
+        enc_len = cfg.frontend_len if cfg.is_encdec() else 0
+        caches = init_cache(cfg, b, s_max, enc_len=enc_len)
+        if cfg.is_encdec():
+            # seed cross-attn cache from a prefill
+            batch = _batch_for(cfg, key, b=b, s=8)
+            _, pcaches = prefill(params, cfg, batch)
+        token = jnp.zeros((b, 1), jnp.int32)
+        logits, caches = jax.jit(
+            lambda p, t, c: decode_step(p, cfg, t, c, jnp.asarray(4, jnp.int32))
+        )(params, token, caches)
+        assert logits.shape == (b, 1, cfg.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+
+
+class TestDecodeConsistency:
+    @pytest.mark.parametrize("arch", ["yi_9b", "gemma3_12b", "deepseek_v3_671b", "mamba2_1p3b", "zamba2_1p2b"])
+    def test_prefill_then_decode_matches_full_forward(self, arch, key):
+        """Teacher-forced decode must reproduce the full-sequence logits:
+        run s steps of decode_step from an empty cache and compare with
+        the one-shot forward at each position."""
+        cfg = reduced(get_config(arch))
+        params = init_params(cfg, key)
+        b, s = 1, 8
+        batch = _batch_for(cfg, key, b=b, s=s)
+        tokens = batch["tokens"]
+
+        # full forward logits at every position
+        full_logits, _ = prefill(params, cfg, {**batch, "tokens": tokens})
+        # prefill returns only last position; recompute via loss path
+        from repro.models.model import _embed, _logits
+        from repro.models.transformer import forward_stack
+
+        x = _embed(params, cfg, tokens, batch)
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x, _, _ = forward_stack(
+            params["decoder"], layer_segments(cfg), cfg, x, positions,
+            shared_params=params.get("shared_attn"),
+        )
+        ref = np.asarray(_logits(params, cfg, x))  # (b, s, V)
+
+        caches = init_cache(cfg, b, s)
+        outs = []
+        for i in range(s):
+            logits, caches = decode_step(
+                params, cfg, tokens[:, i : i + 1], caches, jnp.asarray(i, jnp.int32)
+            )
+            outs.append(np.asarray(logits[:, 0, :]))
+        got = np.stack(outs, axis=1)
+        np.testing.assert_allclose(got, ref, rtol=2e-2, atol=2e-2)
+
+
+class TestSSD:
+    def test_chunked_matches_recurrence(self, key):
+        cfg = reduced(get_config("mamba2_1p3b"))
+        p = init_ssm(key, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.fold_in(key, 2), (2, 64, cfg.d_model)) * 0.1
+        y_chunked, (state, _) = ssd_full(p, x, cfg)
+        y_ref = ssd_reference(p, x, cfg)
+        np.testing.assert_allclose(
+            np.asarray(y_chunked), np.asarray(y_ref), rtol=5e-3, atol=5e-3
+        )
+
+    def test_prefill_state_continues_decode(self, key):
+        """State handed from ssd_full must continue the recurrence
+        identically to running the whole sequence recurrently."""
+        from repro.models.ssm import ssd_decode
+
+        cfg = reduced(get_config("mamba2_1p3b"))
+        p = init_ssm(key, cfg, jnp.float32)
+        x = jax.random.normal(jax.random.fold_in(key, 3), (1, 40, cfg.d_model)) * 0.1
+        s_pre = 32
+        _, (state, conv_tail) = ssd_full(p, x[:, :s_pre, :], cfg)
+        outs = []
+        st, cv = state, conv_tail
+        for i in range(s_pre, 40):
+            o, st, cv = ssd_decode(p, x[:, i : i + 1, :], st, cv, cfg)
+            outs.append(np.asarray(o))
+        ref = np.asarray(ssd_reference(p, x, cfg))[:, s_pre:, :]
+        got = np.concatenate(outs, axis=1)
+        np.testing.assert_allclose(got, ref, rtol=5e-3, atol=5e-3)
+
+
+class TestMoE:
+    def test_capacity_rounding(self):
+        cfg = get_config("deepseek_v3_671b")
+        c = moe_capacity(cfg, 1024)
+        assert c % 8 == 0 and c >= 1024 * 8 * 1.25 / 256
+
+    def test_moe_output_finite_and_shaped(self, key):
+        cfg = reduced(get_config("grok1_314b"))
+        p = init_moe(key, cfg, jnp.float32)
+        x = jax.random.normal(key, (2, 16, cfg.d_model)) * 0.1
+        out, aux = apply_moe(p, x, cfg)
+        assert out.shape == x.shape
+        assert np.isfinite(np.asarray(out)).all()
+        assert float(aux) >= 0.0
+
+    def test_moe_respects_capacity_drop(self, key):
+        """With capacity_factor so small every expert overflows, output
+        must be (near) zero for dropped tokens, not NaN."""
+        import dataclasses
+
+        cfg = dataclasses.replace(reduced(get_config("grok1_314b")), capacity_factor=0.01)
+        p = init_moe(key, cfg, jnp.float32)
+        x = jax.random.normal(key, (1, 64, cfg.d_model)) * 0.1
+        out, _ = apply_moe(p, x, cfg)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_router_gradient_flows(self, key):
+        cfg = reduced(get_config("deepseek_v3_671b"))
+        p = init_moe(key, cfg, jnp.float32)
+        x = jax.random.normal(key, (1, 16, cfg.d_model)) * 0.1
+
+        def f(pp):
+            out, aux = apply_moe(pp, x, cfg)
+            return jnp.sum(out**2) + aux
+
+        g = jax.grad(f)(p)
+        assert float(jnp.sum(jnp.abs(g["router"]))) > 0.0

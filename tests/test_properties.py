@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) for system invariants across
+layers: RoPE/RMSNorm identities, attention masking, sharding-fit rules,
+the exp-loss potential recursion, and the simulator's conservation
+laws."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import fit_spec
+from repro.models.layers import apply_rope, rms_norm, rope_freqs, softmax_cross_entropy
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover
+    HAVE_HYP = False
+
+pytestmark = pytest.mark.skipif(not HAVE_HYP, reason="hypothesis not installed")
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(min_value=1, max_value=8), st.integers(min_value=2, max_value=16))
+def test_rope_preserves_norm(b, s):
+    """Rotations never change vector norms."""
+    key = jax.random.PRNGKey(b * 31 + s)
+    x = jax.random.normal(key, (b, s, 2, 8))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    cos, sin = rope_freqs(pos, 8, 10_000.0)
+    y = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-4,
+    )
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(min_value=2, max_value=64))
+def test_rope_relative_property(d2):
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    d = d2 * 2
+    key = jax.random.PRNGKey(d)
+    q = jax.random.normal(key, (1, 1, 1, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, d))
+
+    def dot_at(i, j):
+        ci, si = rope_freqs(jnp.asarray([[i]]), d, 10_000.0)
+        cj, sj = rope_freqs(jnp.asarray([[j]]), d, 10_000.0)
+        return float(jnp.sum(apply_rope(q, ci, si) * apply_rope(k, cj, sj)))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(9, 7), rel=1e-3, abs=1e-4)
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.floats(min_value=0.5, max_value=100.0))
+def test_rms_norm_scale_invariance(scale):
+    """Invariance is exact up to the eps regulariser."""
+    x = jnp.asarray([[1.0, -2.0, 3.0, 0.5]])
+    g = jnp.zeros((4,))
+    a = rms_norm(x, g)
+    b = rms_norm(x * scale, g)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-2)
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    st.integers(min_value=1, max_value=5),
+    st.integers(min_value=2, max_value=50),
+)
+def test_cross_entropy_bounds(b, v):
+    """0 <= CE; CE(uniform logits) == log V."""
+    logits = jnp.zeros((b, 3, v))
+    labels = jnp.zeros((b, 3), jnp.int32)
+    mask = jnp.ones((b, 3))
+    ce = float(softmax_cross_entropy(logits, labels, mask))
+    assert ce == pytest.approx(np.log(v), rel=1e-5)
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    st.lists(st.integers(min_value=1, max_value=8192), min_size=1, max_size=4),
+    st.sampled_from([("data",), ("model",), ("data", "model")]),
+)
+def test_fit_spec_always_valid(shape, axes):
+    """fit_spec output always divides evenly (the jit contract)."""
+    sizes = {"data": 16, "model": 16, "pod": 2}
+    spec = P(*(axes[i % len(axes)] for i in range(len(shape))))
+    fitted = fit_spec(spec, tuple(shape), sizes)
+    for dim, part in zip(shape, tuple(fitted) + (None,) * len(shape)):
+        if part is None:
+            continue
+        ax = part if isinstance(part, tuple) else (part,)
+        total = 1
+        for a in ax:
+            total *= sizes[a]
+        assert dim % total == 0
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.lists(st.floats(min_value=0.01, max_value=0.49), min_size=1, max_size=20))
+def test_potential_recursion_monotone(gammas):
+    """The certificate recursion L += 1/2 log(1-4g^2) strictly decreases
+    and exp(L) in (0, 1] — certificates are always meaningful."""
+    L = 0.0
+    for g in gammas:
+        L_new = L + 0.5 * np.log1p(-4.0 * g * g)
+        assert L_new < L
+        L = L_new
+    assert 0.0 < np.exp(L) <= 1.0
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(min_value=1, max_value=6), st.integers(min_value=0, max_value=120))
+def test_ring_slot_positions(S_pow, pos):
+    """Ring-cache slot->absolute-position math: each slot holds the
+    largest p <= pos with p % S == slot; all held positions are within
+    the last S steps."""
+    S = 2 ** S_pow
+    slot = np.arange(S)
+    kpos = pos - (pos - slot) % S
+    assert (kpos <= pos).all()
+    assert (kpos > pos - S).all()
+    assert (kpos % S == slot).all()
