@@ -1,0 +1,128 @@
+"""Worker-count scaling of the round-based TMSN engine (the paper's
+headline regime: hundreds of independent machines).
+
+Sweeps W ∈ {8, 32, 128, 256} (quick profile stops at 128) and reports,
+per W:
+
+  * ``rounds_to_target``   — gossip efficiency (should NOT grow with W;
+    more workers means more parallel exploration of the feature space),
+  * ``wall_ms_per_round``  — engine throughput: one round advances all W
+    workers one segment inside a single jitted computation, so this
+    should grow far sublinearly in W,
+  * ``per_segment_us``     — wall per worker-segment (the number that
+    collapses for the event-driven simulator past ~16 workers).
+
+At W=8 the event simulator runs the same workload for a direct
+per-segment speedup ratio (`engine_speedup_vs_sim`).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.boosting import BatchedSparrowWorker, SparrowConfig, SparrowWorker
+from repro.boosting.scanner import ScannerConfig
+from repro.core.engine import EngineConfig, TMSNEngine
+from repro.core.simulator import SimulatorConfig, TMSNSimulator, WorkerSpec
+from repro.data.splice import SpliceConfig, make_splice_like, train_test_split
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+TARGET_CERT = -0.06
+
+
+def _data(quick: bool):
+    n = 30_000 if quick else 60_000
+    # d >= max sweep W: ownership assigns feature j to worker j mod W,
+    # so d < W leaves workers >= d with zero features — they could never
+    # fire and rounds_to_target at large W would be vacuous.
+    d = 128 if quick else 256
+    xb, y, _ = make_splice_like(SpliceConfig(n=n, d=d, num_bins=8, seed=11))
+    xtr, ytr, _, _ = train_test_split(xb, y)
+    return xtr, ytr
+
+
+def _sparrow_cfg(w: int) -> SparrowConfig:
+    return SparrowConfig(
+        sample_size=1024,
+        capacity=48,
+        scanner=ScannerConfig(chunk_size=256, num_bins=8, gamma0=0.25),
+        n_workers=w,
+    )
+
+
+def _run_engine(xtr, ytr, w: int, max_rounds: int) -> dict:
+    worker = BatchedSparrowWorker(xtr, ytr, _sparrow_cfg(w))
+    eng = TMSNEngine(
+        worker,
+        EngineConfig(
+            n_workers=w,
+            max_rounds=max_rounds,
+            target_certificate=TARGET_CERT,
+            seed=0,
+            record_history=False,
+        ),
+    )
+    res = eng.run()  # first run pays jit compilation
+    t0 = time.time()
+    res = eng.run()  # second run reuses the compiled round step
+    wall = time.time() - t0
+    out = {
+        "rounds_to_target": res.rounds,
+        "hit_target": min(res.final_certificates) <= TARGET_CERT,
+        "best_cert": min(res.final_certificates),
+        "wall_s": wall,
+        "wall_ms_per_round": 1e3 * wall / max(res.rounds, 1),
+        "per_segment_us": 1e6 * wall / max(res.rounds * w, 1),
+        "messages_sent": res.messages_sent,
+        "messages_accepted": res.messages_accepted,
+    }
+    return out
+
+
+def run(quick: bool = False) -> list[str]:
+    lines: list[str] = []
+    out: dict = {}
+    xtr, ytr = _data(quick)
+    sweep = (8, 32, 128) if quick else (8, 32, 128, 256)
+    max_rounds = 200 if quick else 400
+
+    for w in sweep:
+        res = _run_engine(xtr, ytr, w, max_rounds)
+        out[f"w{w}"] = res
+        lines.append(f"scaling.w{w}.rounds_to_target,{res['rounds_to_target']},cap_{max_rounds}")
+        lines.append(f"scaling.w{w}.wall_ms_per_round,{res['wall_ms_per_round']:.1f},")
+        lines.append(f"scaling.w{w}.per_segment_us,{res['per_segment_us']:.0f},")
+        lines.append(f"scaling.w{w}.best_cert,{res['best_cert']:.4f},target_{TARGET_CERT}")
+
+    # engine vs event-sim per-segment cost at a size the sim can still run
+    w = 8
+    worker = SparrowWorker(xtr, ytr, _sparrow_cfg(w))
+    ev = 400 if quick else 1600
+    sim = TMSNSimulator(
+        worker,
+        [WorkerSpec() for _ in range(w)],
+        SimulatorConfig(n_workers=w, max_events=ev, seed=0),
+    )
+    sim.run()  # warm the per-segment jit caches
+    t0 = time.time()
+    res_sim = sim.run()
+    sim_wall = time.time() - t0
+    sim_us = 1e6 * sim_wall / max(res_sim.events_processed, 1)
+    out["sim_w8"] = {"events": res_sim.events_processed, "per_event_us": sim_us}
+    speedup = sim_us / max(out["w8"]["per_segment_us"], 1e-9)
+    out["engine_speedup_vs_sim_w8"] = speedup
+    lines.append(f"scaling.sim_w8.per_event_us,{sim_us:.0f},event_driven_oracle")
+    lines.append(f"scaling.w8.engine_speedup_vs_sim,{speedup:.1f},per_segment_ratio")
+
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "scaling.json"), "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    return lines
+
+
+if __name__ == "__main__":
+    for line in run(quick=True):
+        print(line)

@@ -1,33 +1,81 @@
 """Benchmark entry point — one module per paper table/figure plus the
 framework-level benches. Prints ``name,value,derived`` CSV lines.
 
-  PYTHONPATH=src python -m benchmarks.run [--full]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--json out.json]
 
 (--full runs the paper-scale sizes; default is the quick profile so the
-suite completes on the CPU container.)
+suite completes on the CPU container. --json additionally writes the
+collected ``{name: value}`` dict as machine-readable JSON — the format
+CI artifacts and the BENCH_*.json trajectory share.)
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+
+def _parse_value(raw: str):
+    try:
+        return float(raw)
+    except ValueError:
+        return raw
+
+
+def collect(selected: list[str], benches: dict, quick: bool) -> tuple[dict, int]:
+    """Run the selected benches, printing (flushed) each CSV line as it
+    is produced — a hung bench still leaves partial output in CI logs.
+    Returns (results_dict, failures)."""
+    results: dict = {}
+    failures = 0
+
+    def _emit(line: str) -> None:
+        print(line, flush=True)
+
+    for name in selected:
+        t0 = time.time()
+        try:
+            for line in benches[name](quick=quick):
+                _emit(line)
+                parts = line.split(",")
+                if len(parts) >= 2:
+                    results[parts[0]] = _parse_value(parts[1])
+            wall = time.time() - t0
+            _emit(f"bench.{name}.wall_s,{wall:.1f},")
+            results[f"bench.{name}.wall_s"] = round(wall, 1)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            _emit(f"bench.{name}.FAILED,{type(e).__name__},{e}")
+            results[f"bench.{name}.FAILED"] = type(e).__name__
+    return results, failures
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
+    ap.add_argument(
+        "--json", default=None, metavar="OUT", help="also write {name: value} JSON here"
+    )
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import bench_convergence, bench_kernels, bench_protocol, bench_stopping
+    from benchmarks import (
+        bench_convergence,
+        bench_kernels,
+        bench_protocol,
+        bench_scaling,
+        bench_stopping,
+    )
 
     benches = {
         "stopping": bench_stopping.run,
         "kernels": bench_kernels.run,
         "protocol": bench_protocol.run,
         "convergence": bench_convergence.run,
+        "scaling": bench_scaling.run,
     }
     try:
         from benchmarks import bench_tmsn_sgd
@@ -43,17 +91,12 @@ def main() -> None:
         pass
 
     selected = args.only.split(",") if args.only else list(benches)
-    print("name,value,derived")
-    failures = 0
-    for name in selected:
-        t0 = time.time()
-        try:
-            for line in benches[name](quick=quick):
-                print(line, flush=True)
-            print(f"bench.{name}.wall_s,{time.time()-t0:.1f},", flush=True)
-        except Exception as e:  # noqa: BLE001
-            failures += 1
-            print(f"bench.{name}.FAILED,{type(e).__name__},{e}", flush=True)
+    print("name,value,derived", flush=True)
+    results, failures = collect(selected, benches, quick)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+        print(f"# wrote {len(results)} results to {args.json}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -16,7 +16,14 @@ from repro.boosting.stumps import (
 )
 from repro.boosting.scanner import ScannerConfig, ScannerState, init_scanner, scan_chunk
 from repro.boosting.sampler import minimal_variance_sample, rejection_sample
-from repro.boosting.sparrow import SparrowConfig, SparrowWorker, SparrowState
+from repro.boosting.sparrow import (
+    SparrowConfig,
+    SparrowWorker,
+    SparrowState,
+    draw_sample,
+    feature_ownership_masks,
+)
+from repro.boosting.batched_sparrow import BatchedSparrowState, BatchedSparrowWorker
 from repro.boosting.baselines import (
     BoosterConfig,
     train_exact_greedy,
@@ -44,6 +51,10 @@ __all__ = [
     "SparrowConfig",
     "SparrowWorker",
     "SparrowState",
+    "BatchedSparrowWorker",
+    "BatchedSparrowState",
+    "draw_sample",
+    "feature_ownership_masks",
     "BoosterConfig",
     "train_exact_greedy",
     "train_goss",

@@ -1,0 +1,298 @@
+"""Batched Sparrow: W workers as stacked ``(W, ...)`` pytrees.
+
+The per-worker computation is exactly :mod:`repro.boosting.sparrow`'s
+scan/fire/resample/adopt logic, re-expressed so every branch is an
+elementwise select and the chunk scan is ``vmap(scan_chunk)`` over the
+worker axis — including the Pallas ``kernels/edge_scan`` path when
+``ScannerConfig.use_kernel`` is set (``vmap`` of a ``pallas_call``
+prepends a batch grid dimension, so all W histogram accumulations run
+in one kernel launch).
+
+Plugged into :class:`repro.core.engine.TMSNEngine` this advances all W
+workers one segment per round in a single jitted computation; the
+event-driven simulator with the unbatched :class:`SparrowWorker`
+remains the fidelity-1 oracle (``tests/test_engine.py`` pins the
+per-segment equivalence of the two).
+
+Deviations from the unbatched worker, both bounded and test-pinned:
+
+  * adoption cost is charged on the round it happens instead of via
+    ``pending_cost`` on the next segment (same totals, simpler state);
+  * Python-float certificate accumulation becomes float32 array math
+    (differences are at the 1e-6 level).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.boosting.scanner import (
+    SampleState,
+    ScannerState,
+    init_scanner,
+    reset_after_fire,
+    reset_after_fruitless_pass,
+    scan_chunk,
+)
+from repro.boosting.sparrow import (
+    STUMP_EVAL_COST,
+    SparrowConfig,
+    SparrowWorkerBase,
+    draw_sample,
+)
+from repro.core.ess import effective_sample_size
+from repro.boosting.stumps import (
+    StumpModel,
+    alpha_from_gamma,
+    append_stump,
+    empty_model,
+    model_payload_bytes,
+    predict_margin_delta,
+)
+
+
+class BatchedSparrowState(NamedTuple):
+    """Stacked per-worker state; every leaf has a leading (W,) axis."""
+
+    model: StumpModel  # fields (W, T), count (W,)
+    cert: jnp.ndarray  # (W,) f32
+    scanner: ScannerState  # leaves (W, ...)
+    sample: SampleState  # leaves (W, m, ...)
+    disk_margin: jnp.ndarray  # (W, n)
+    disk_t: jnp.ndarray  # (W, n) i32
+    key: jax.Array  # (W, 2) PRNG keys
+    needs_resample: jnp.ndarray  # (W,) bool
+    fires: jnp.ndarray  # (W,) i32
+    resamples: jnp.ndarray  # (W,) i32
+    sample_model_count: jnp.ndarray  # (W,) i32
+    scan_since_resample: jnp.ndarray  # (W,) f32
+
+
+def _bwhere(cond: jnp.ndarray, new, old):
+    """Per-worker select over a stacked pytree: broadcast the (W,) cond
+    over each leaf's trailing dims."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(cond.reshape(cond.shape + (1,) * (a.ndim - 1)), a, b),
+        new,
+        old,
+    )
+
+
+def common_prefix_len(a: StumpModel, b: StumpModel) -> jnp.ndarray:
+    """Jit-safe length of the shared stump prefix of two (unbatched)
+    models (the traced counterpart of ``SparrowWorker._common_prefix``)."""
+    same = (
+        (a.feat == b.feat)
+        & (a.thr == b.thr)
+        & (a.sign == b.sign)
+        & (a.alpha == b.alpha)
+    )
+    slots = jnp.arange(a.capacity)
+    same = same & (slots < jnp.minimum(a.count, b.count))
+    return jnp.sum(jnp.cumprod(same.astype(jnp.int32))).astype(jnp.int32)
+
+
+class BatchedSparrowWorker(SparrowWorkerBase):
+    """Implements the engine's BatchedTMSNWorker protocol for Sparrow."""
+
+    # ----- engine protocol hooks --------------------------------------
+    def init_batch(self, n_workers: int, seed: int) -> BatchedSparrowState:
+        cfg = self.config
+        if n_workers != cfg.n_workers:
+            raise ValueError(f"engine W={n_workers} != SparrowConfig.n_workers={cfg.n_workers}")
+        # same per-worker streams as TMSNSimulator: PRNGKey(seed + 1000*i)
+        keys = jnp.stack([jax.random.PRNGKey(seed + 1000 * i) for i in range(n_workers)])
+
+        def _init_one(key: jax.Array):
+            model = empty_model(cfg.capacity)
+            disk_margin = jnp.zeros((self.n,), jnp.float32)
+            key, sub = jax.random.split(key)
+            sample = draw_sample(sub, self.xb, self.y, model, disk_margin, cfg.sample_size)
+            return model, sample, key
+
+        model, sample, keys = jax.vmap(_init_one)(keys)
+        scanner = jax.vmap(lambda _: init_scanner(self.d, cfg.scanner))(
+            jnp.arange(n_workers)
+        )
+        zeros_i = jnp.zeros((n_workers,), jnp.int32)
+        return BatchedSparrowState(
+            model=model,
+            cert=jnp.zeros((n_workers,), jnp.float32),
+            scanner=scanner,
+            sample=sample,
+            disk_margin=jnp.zeros((n_workers, self.n), jnp.float32),
+            disk_t=jnp.zeros((n_workers, self.n), jnp.int32),
+            key=keys,
+            needs_resample=jnp.zeros((n_workers,), bool),
+            fires=zeros_i,
+            resamples=zeros_i,
+            sample_model_count=zeros_i,
+            scan_since_resample=jnp.zeros((n_workers,), jnp.float32),
+        )
+
+    def certificates(self, state: BatchedSparrowState) -> jnp.ndarray:
+        return state.cert
+
+    def export_models(self, state: BatchedSparrowState) -> StumpModel:
+        return state.model
+
+    def needs_resample(self, state: BatchedSparrowState) -> jnp.ndarray:
+        return state.needs_resample
+
+    def payload_bytes(self) -> int:
+        return model_payload_bytes(empty_model(self.config.capacity))
+
+    # ----- one scan segment for every masked worker -------------------
+    def scan_round(
+        self, state: BatchedSparrowState, mask: jnp.ndarray
+    ) -> tuple[BatchedSparrowState, jnp.ndarray, jnp.ndarray]:
+        cfg = self.config
+        m = cfg.sample_size
+        scan = functools.partial(scan_chunk, config=cfg.scanner)
+        scanner_s, sample_s, info = jax.vmap(scan)(
+            state.scanner, state.sample, state.model, self._feat_masks
+        )
+        chunk = min(cfg.scanner.chunk_size, m)
+        maskf = mask.astype(jnp.float32)
+        cost = (chunk * cfg.mem_read_cost + STUMP_EVAL_COST * info.stump_evals) * maskf
+
+        # --- fire: append the certified stump, advance the certificate ---
+        gamma = info.cert_gamma
+        alpha = alpha_from_gamma(gamma)
+        model2 = jax.vmap(append_stump)(state.model, info.feat, info.thr, info.sign, alpha)
+        grew = model2.count > state.model.count
+        fired = info.fired & mask & grew  # at capacity: no growth, no certificate claim
+        cert = jnp.where(
+            fired, state.cert + 0.5 * jnp.log1p(-4.0 * jnp.square(gamma)), state.cert
+        )
+        model = _bwhere(fired, model2, state.model)
+
+        fire_scanner = jax.vmap(
+            lambda s, g: reset_after_fire(s, cfg.keep_gamma_on_fire, cfg.scanner, g)
+        )(scanner_s, info.emp_gamma)
+        fruitless = (~info.fired) & info.full_pass & mask
+        fruitless_scanner = jax.vmap(reset_after_fruitless_pass)(scanner_s)
+        scanner = _bwhere(
+            fired, fire_scanner, _bwhere(fruitless, fruitless_scanner, scanner_s)
+        )
+
+        # --- ESS staleness / gamma-exhaustion -> schedule resample ---
+        wts = jnp.exp(
+            jnp.clip(-sample_s.y * (sample_s.margin_l - sample_s.margin_s), -30.0, 30.0)
+        )
+        ess = jax.vmap(effective_sample_size)(wts)
+        stale = ess / m < cfg.ess_threshold
+        advanced = state.model.count > state.sample_model_count
+        exhausted = (scanner_s.gamma <= 2e-4) & advanced
+        needs = jnp.where(
+            fired, stale, jnp.where(fruitless, stale | exhausted, state.needs_resample)
+        )
+
+        new_state = state._replace(
+            model=model,
+            cert=cert,
+            scanner=scanner,
+            sample=sample_s,
+            needs_resample=needs,
+            fires=state.fires + fired.astype(jnp.int32),
+            scan_since_resample=state.scan_since_resample + cost,
+        )
+        # masked-out workers come back untouched
+        new_state = _bwhere(mask, new_state, state)
+        return new_state, cost, fired
+
+    # ----- resample segment (rare; sequential over workers so the full
+    # disk pass never materializes a (W, n, T) intermediate) ------------
+    def resample_round(
+        self, state: BatchedSparrowState, do: jnp.ndarray
+    ) -> tuple[BatchedSparrowState, jnp.ndarray]:
+        cfg = self.config
+
+        def _resample_one(st: BatchedSparrowState):
+            delta = predict_margin_delta(st.model, self.xb, st.disk_t)
+            evals = jnp.sum(
+                jnp.minimum(st.model.count - st.disk_t, st.model.capacity)
+            ).astype(jnp.float32)
+            disk_margin = st.disk_margin + delta
+            disk_t = jnp.full_like(st.disk_t, st.model.count)
+            key, sub = jax.random.split(st.key)
+            sample = draw_sample(sub, self.xb, self.y, st.model, disk_margin, cfg.sample_size)
+            cost = self.n * cfg.disk_read_cost + STUMP_EVAL_COST * evals
+            if cfg.parallel_sampler:
+                cost = jnp.maximum(cost - st.scan_since_resample, 0.0)
+            scanner = reset_after_fire(st.scanner, True, cfg.scanner)._replace(
+                pos=jnp.zeros((), jnp.int32)
+            )
+            new = st._replace(
+                sample=sample,
+                disk_margin=disk_margin,
+                disk_t=disk_t,
+                key=key,
+                needs_resample=jnp.zeros((), bool),
+                scanner=scanner,
+                resamples=st.resamples + 1,
+                sample_model_count=st.model.count,
+                scan_since_resample=jnp.zeros((), jnp.float32),
+            )
+            return new, jnp.asarray(cost, jnp.float32)
+
+        def _one(per):
+            st, flag = per
+            return jax.lax.cond(
+                flag, _resample_one, lambda s: (s, jnp.zeros((), jnp.float32)), st
+            )
+
+        new_state, cost = jax.lax.map(_one, (state, do))
+        return new_state, cost
+
+    # ----- adoption (interrupt + replace (H, L)) -----------------------
+    def adopt_batch(
+        self,
+        state: BatchedSparrowState,
+        models: StumpModel,
+        certs: jnp.ndarray,
+        take: jnp.ndarray,
+    ) -> tuple[BatchedSparrowState, jnp.ndarray]:
+        """Vectorized counterpart of ``SparrowWorker.adopt``: incremental
+        margin transfer across the shared stump prefix, elementwise."""
+        cfg = self.config
+        m = cfg.sample_size
+
+        def _adopt_one(st: BatchedSparrowState, new_model: StumpModel, new_cert):
+            p = common_prefix_len(st.model, new_model)
+            xb = st.sample.xb
+            catchup = predict_margin_delta(st.model, xb, st.sample.t_l)
+            evals = jnp.sum(
+                jnp.clip(st.model.count - st.sample.t_l, 0, None)
+            ).astype(jnp.float32)
+            full_old = st.sample.margin_l + catchup
+            pfx = jnp.full((m,), p, jnp.int32)
+            old_sfx = predict_margin_delta(st.model, xb, pfx)
+            new_sfx = predict_margin_delta(new_model, xb, pfx)
+            m_new = full_old - old_sfx + new_sfx
+            evals += (m * ((st.model.count - p) + (new_model.count - p))).astype(jnp.float32)
+            sample = st.sample._replace(
+                margin_l=m_new,
+                t_l=jnp.full_like(st.sample.t_l, new_model.count),
+            )
+            keep_disk = p >= st.disk_t[0]
+            disk_margin = jnp.where(keep_disk, st.disk_margin, 0.0)
+            disk_t = jnp.where(keep_disk, st.disk_t, 0)
+            cost = STUMP_EVAL_COST * evals * cfg.mem_read_cost
+            new = st._replace(
+                model=new_model,
+                cert=jnp.asarray(new_cert, jnp.float32),
+                sample=sample,
+                disk_margin=disk_margin,
+                disk_t=disk_t,
+                scanner=reset_after_fire(st.scanner, True, cfg.scanner),
+            )
+            return new, cost
+
+        adopted, cost = jax.vmap(_adopt_one)(state, models, certs)
+        new_state = _bwhere(take, adopted, state)
+        return new_state, cost * take.astype(jnp.float32)

@@ -53,6 +53,41 @@ from repro.core.ess import effective_sample_size
 STUMP_EVAL_COST = 0.1  # relative cost of one incremental stump eval vs one example read
 
 
+def feature_ownership_masks(d: int, n_workers: int, redundancy: int = 1) -> np.ndarray:
+    """(n_workers, d) bool ownership masks (feature-based parallelization,
+    §4): feature j belongs to workers {j mod k, ..., j mod k + r - 1}."""
+    k = n_workers
+    r = max(1, min(redundancy, k))
+    fmod = np.arange(d) % k
+    masks = np.zeros((k, d), bool)
+    for wid in range(k):
+        for j in range(r):
+            masks[wid] |= fmod == ((wid + j) % k)
+    return masks
+
+
+def draw_sample(
+    key: jax.Array,
+    disk_xb: jnp.ndarray,
+    disk_y: jnp.ndarray,
+    model: StumpModel,
+    disk_margin: jnp.ndarray,
+    sample_size: int,
+) -> SampleState:
+    """Draw a fresh in-memory sample from the disk set (pure jnp, so the
+    batched worker can ``vmap`` it over stacked per-worker states)."""
+    w = jnp.exp(jnp.clip(-disk_y * disk_margin, -30.0, 30.0))
+    idx = minimal_variance_sample(key, w, sample_size)
+    margin = disk_margin[idx]
+    return SampleState(
+        xb=disk_xb[idx],
+        y=disk_y[idx],
+        margin_s=margin,
+        margin_l=margin,
+        t_l=jnp.full((sample_size,), model.count, jnp.int32),
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class SparrowConfig:
     sample_size: int = 8192  # m — in-memory sample size
@@ -98,8 +133,12 @@ class SparrowState(NamedTuple):
     scan_since_resample: float = 0.0  # for the parallel-sampler overlap model
 
 
-class SparrowWorker:
-    """Implements the simulator's TMSNWorker protocol for Sparrow."""
+class SparrowWorkerBase:
+    """Shared disk-set/config initialization for the unbatched and
+    batched Sparrow workers: dtype coercion, sample-size validation,
+    and the feature-ownership table live in ONE place so the two
+    workers (whose equivalence tests pin segment-for-segment) cannot
+    silently diverge on setup."""
 
     def __init__(
         self,
@@ -113,16 +152,19 @@ class SparrowWorker:
         self.config = config
         if config.sample_size > self.n:
             raise ValueError("sample_size exceeds dataset size")
+        # ownership is static per run; feature_mask sits on the
+        # per-segment hot path, so build the table once
+        self._feat_masks = jnp.asarray(
+            feature_ownership_masks(self.d, config.n_workers, config.ownership_redundancy)
+        )
 
     # ----- feature ownership (feature-based parallelization, §4) -----
     def feature_mask(self, worker_id: int) -> jnp.ndarray:
-        k = self.config.n_workers
-        r = max(1, min(self.config.ownership_redundancy, k))
-        fmod = np.arange(self.d) % k
-        owned = np.zeros(self.d, bool)
-        for j in range(r):
-            owned |= fmod == ((worker_id + j) % k)
-        return jnp.asarray(owned)
+        return self._feat_masks[worker_id]
+
+
+class SparrowWorker(SparrowWorkerBase):
+    """Implements the simulator's TMSNWorker protocol for Sparrow."""
 
     # ----- protocol hooks -----
     def init_state(self, worker_id: int, seed: int) -> SparrowState:
@@ -151,16 +193,7 @@ class SparrowWorker:
     def _draw_sample(
         self, key: jax.Array, model: StumpModel, disk_margin: jnp.ndarray
     ) -> SampleState:
-        w = jnp.exp(jnp.clip(-self.y * disk_margin, -30.0, 30.0))
-        idx = minimal_variance_sample(key, w, self.config.sample_size)
-        margin = disk_margin[idx]
-        return SampleState(
-            xb=self.xb[idx],
-            y=self.y[idx],
-            margin_s=margin,
-            margin_l=margin,
-            t_l=jnp.full((self.config.sample_size,), model.count, jnp.int32),
-        )
+        return draw_sample(key, self.xb, self.y, model, disk_margin, self.config.sample_size)
 
     def run_segment(self, state: SparrowState) -> tuple[SparrowState, float, bool]:
         cost = state.pending_cost

@@ -13,11 +13,17 @@ from repro.core.stopping import (
     stopping_threshold,
 )
 from repro.core.protocol import Certificate, TMSNMessage, accepts, improves
+from repro.core.result import SimResult, TrafficCounters
 from repro.core.simulator import (
     SimulatorConfig,
     WorkerSpec,
     TMSNSimulator,
-    SimResult,
+)
+from repro.core.engine import (
+    BatchedTMSNWorker,
+    EngineConfig,
+    TMSNEngine,
+    quantize_latency,
 )
 
 __all__ = [
@@ -33,4 +39,9 @@ __all__ = [
     "WorkerSpec",
     "TMSNSimulator",
     "SimResult",
+    "TrafficCounters",
+    "BatchedTMSNWorker",
+    "EngineConfig",
+    "TMSNEngine",
+    "quantize_latency",
 ]

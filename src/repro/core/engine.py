@@ -1,0 +1,372 @@
+"""Vectorized round-based TMSN engine (fidelity level 2).
+
+The event-driven :class:`~repro.core.simulator.TMSNSimulator` is the
+fidelity-1 oracle: exact per-event ordering, continuous latencies, one
+Python heap pop (and one small JAX dispatch) per worker segment. That
+is faithful but interpreter-bound — past ~16 workers the wall clock is
+all Python, which puts the paper's actual regime (hundreds of machines,
+resilience that only shows at scale) out of reach.
+
+This engine trades event fidelity for a *round* abstraction that keeps
+every worker on the device at once:
+
+  * all W workers carry their state as stacked ``(W, ...)`` arrays and
+    advance one scheduling segment per round inside a single jitted
+    computation (``vmap`` over the worker axis);
+  * gossip is a masked exchange step — per-link latencies are quantized
+    to integer round delays and carried in a ``(W, W, D)`` in-flight
+    certificate buffer (``inflight[dst, src, d]`` = certificate of a
+    message from ``src`` reaching ``dst`` in ``d`` more rounds), with
+    model payloads looked up in a ``(D, W)`` snapshot ring;
+  * ``accepts`` / ``improves`` from :mod:`repro.core.protocol` are
+    applied elementwise, so fail-stop is a boolean mask and laggards
+    are a per-worker speed vector driving a compute-credit accumulator
+    (a 0.25-speed worker completes a segment every 4th round).
+
+Round order (matches the event sim under zero latency + uniform speed:
+a message broadcast during round ``r`` is applied to every receiver
+*before* its round ``r+1`` segment):
+
+  1. deliver arrivals due this round (adopt the best accepted message),
+  2. shift the in-flight buffer,
+  3. run one segment per live, credit-covered worker (resample-flagged
+     workers spend their segment on the batched resample path),
+  4. broadcast certificates that strictly improved,
+  5. snapshot every worker's model into the ring.
+
+The engine returns the same :class:`~repro.core.result.SimResult` as
+the simulator, so benchmarks and analysis are substrate-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.protocol import accepts, improves
+from repro.core.result import SimResult, TrafficCounters
+
+
+class BatchedTMSNWorker(Protocol):
+    """Duck-typed batched worker plugged into the engine.
+
+    All methods must be pure and traceable (the engine jits the whole
+    round step, worker computation included). States are stacked
+    pytrees with a leading worker axis; certificates are ``(W,)``
+    float32 arrays (lower = better).
+    """
+
+    def init_batch(self, n_workers: int, seed: int) -> Any: ...
+
+    def scan_round(self, state: Any, mask: jnp.ndarray) -> tuple[Any, jnp.ndarray, jnp.ndarray]:
+        """Run one segment for every worker where ``mask`` is True.
+
+        Returns (new_state, cost (W,), fired (W,)); masked-out workers
+        must come back unchanged with zero cost.
+        """
+        ...
+
+    def needs_resample(self, state: Any) -> jnp.ndarray:
+        """(W,) bool — workers whose next segment is a resample (may be
+        all-False forever for workers without a sampling phase)."""
+        ...
+
+    def resample_round(self, state: Any, do: jnp.ndarray) -> tuple[Any, jnp.ndarray]:
+        """Spend the segment of every worker where ``do`` on a resample;
+        returns (new_state, cost (W,))."""
+        ...
+
+    def certificates(self, state: Any) -> jnp.ndarray: ...
+
+    def export_models(self, state: Any) -> Any:
+        """Stacked model pytree with leading worker axis (the broadcast
+        payload; must be cheap — no recomputation)."""
+        ...
+
+    def adopt_batch(
+        self, state: Any, models: Any, certs: jnp.ndarray, take: jnp.ndarray
+    ) -> tuple[Any, jnp.ndarray]:
+        """Adopt ``models[i]``/``certs[i]`` wherever ``take[i]``;
+        returns (new_state, cost (W,))."""
+        ...
+
+    def payload_bytes(self) -> int: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_workers: int = 4
+    eps: float = 0.0  # protocol gap; gates ACCEPTANCE only (as in the sim)
+    max_rounds: int = 1000
+    #: per-link broadcast latency in ROUNDS: an int (uniform) or a
+    #: (W, W) ``delay[src, dst]`` integer array, clipped to >= 1. A
+    #: message sent during round r is delivered at round r + delay.
+    delay_rounds: Any = 1
+    #: per-worker speed, cost units per simulated second; also drives
+    #: the round-level compute credit (normalized to the fastest
+    #: worker). None = uniform.
+    speed: Any = None
+    #: round index at which each worker fail-stops (None = never).
+    fail_round: Any = None
+    target_certificate: float | None = None
+    seed: int = 0
+    #: record per-worker certificate changes into SimResult.history
+    record_history: bool = True
+
+
+class EngineState(NamedTuple):
+    worker: Any
+    alive: jnp.ndarray  # (W,) bool
+    credit: jnp.ndarray  # (W,) f32 compute credit (laggard model)
+    clock: jnp.ndarray  # (W,) f32 per-worker simulated seconds
+    inflight: jnp.ndarray  # (W, W, D) f32 — [dst, src, d] certs; +inf = empty
+    ring: Any  # model snapshots, leading (D, W)
+    round: jnp.ndarray  # () i32
+    sent: jnp.ndarray  # () i32
+    accepted: jnp.ndarray  # () i32
+    discarded: jnp.ndarray  # () i32
+    cost_total: jnp.ndarray  # () f32
+
+
+class RoundInfo(NamedTuple):
+    """Small per-round summary fetched to the host for history/stop."""
+
+    certs: jnp.ndarray  # (W,)
+    changed: jnp.ndarray  # (W,) bool — cert changed this round (fire or adopt)
+    clock: jnp.ndarray  # (W,)
+    alive: jnp.ndarray  # (W,)
+
+
+def _tree_stack_rows(tree: Any, depth: int) -> Any:
+    """Tile a stacked (W, ...) pytree into a (D, W, ...) ring."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (depth,) + a.shape).copy(), tree
+    )
+
+
+class TMSNEngine:
+    """Round-based TMSN run over a batched worker."""
+
+    def __init__(self, worker: BatchedTMSNWorker, config: EngineConfig) -> None:
+        self.worker = worker
+        self.config = config
+        w = config.n_workers
+
+        delay = np.asarray(config.delay_rounds)
+        if delay.ndim == 0:
+            delay = np.full((w, w), int(delay))
+        if delay.shape != (w, w):
+            raise ValueError(f"delay_rounds must be scalar or ({w},{w}), got {delay.shape}")
+        self._delay = jnp.asarray(np.maximum(delay, 1), jnp.int32)
+        self._depth = int(np.maximum(delay, 1).max())
+
+        speed = np.ones(w) if config.speed is None else np.asarray(config.speed, np.float64)
+        if speed.shape != (w,):
+            raise ValueError(f"speed must be ({w},), got {speed.shape}")
+        self._speed = jnp.asarray(speed, jnp.float32)
+        self._speed_norm = jnp.asarray(speed / speed.max(), jnp.float32)
+
+        fail = (
+            np.full(w, np.iinfo(np.int32).max)
+            if config.fail_round is None
+            else np.asarray(config.fail_round)
+        )
+        if fail.shape != (w,):
+            raise ValueError(f"fail_round must be ({w},), got {fail.shape}")
+        self._fail_round = jnp.asarray(fail, jnp.int32)
+
+        self._step = jax.jit(self._round_step)
+
+    # ------------------------------------------------------------------
+    def _init_state(self) -> EngineState:
+        cfg = self.config
+        w, d = cfg.n_workers, self._depth
+        wstate = self.worker.init_batch(w, cfg.seed)
+        models = self.worker.export_models(wstate)
+        return EngineState(
+            worker=wstate,
+            alive=jnp.ones((w,), bool),
+            credit=jnp.zeros((w,), jnp.float32),
+            clock=jnp.zeros((w,), jnp.float32),
+            inflight=jnp.full((w, w, d), jnp.inf, jnp.float32),
+            ring=_tree_stack_rows(models, d),
+            round=jnp.zeros((), jnp.int32),
+            sent=jnp.zeros((), jnp.int32),
+            accepted=jnp.zeros((), jnp.int32),
+            discarded=jnp.zeros((), jnp.int32),
+            cost_total=jnp.zeros((), jnp.float32),
+        )
+
+    def _round_step(self, state: EngineState) -> tuple[EngineState, RoundInfo]:
+        cfg = self.config
+        w, depth = cfg.n_workers, self._depth
+        r = state.round
+        dst_idx = jnp.arange(w)
+        alive = state.alive & (r < self._fail_round)
+
+        certs0 = self.worker.certificates(state.worker)
+
+        # --- 1. deliver arrivals due this round ---------------------------
+        arr = state.inflight[:, :, 0]  # (dst, src) certs
+        arr_live = jnp.where(alive[:, None], arr, jnp.inf)
+        best_src = jnp.argmin(arr_live, axis=1)  # (W,)
+        best_cert = arr_live[dst_idx, best_src]
+        take = accepts(certs0, best_cert, cfg.eps) & jnp.isfinite(best_cert)
+        n_arrivals = jnp.sum(jnp.isfinite(arr), dtype=jnp.int32)
+        n_taken = jnp.sum(take, dtype=jnp.int32)
+
+        sent_slot = (r - self._delay[best_src, dst_idx]) % depth
+        in_models = jax.tree_util.tree_map(
+            lambda a: a[sent_slot, best_src], state.ring
+        )
+
+        def _adopt(operand):
+            wstate, models, c, t = operand
+            return self.worker.adopt_batch(wstate, models, c, t)
+
+        wstate, adopt_cost = jax.lax.cond(
+            jnp.any(take),
+            _adopt,
+            lambda operand: (operand[0], jnp.zeros((w,), jnp.float32)),
+            (state.worker, in_models, best_cert, take),
+        )
+
+        # --- 2. shift the in-flight buffer --------------------------------
+        inflight = jnp.concatenate(
+            [state.inflight[:, :, 1:], jnp.full((w, w, 1), jnp.inf, jnp.float32)], axis=2
+        )
+
+        # --- 3. one segment per live, credit-covered worker ---------------
+        credit = state.credit + self._speed_norm
+        active = alive & (credit >= 1.0 - 1e-6)
+        credit = jnp.where(active, credit - 1.0, credit)
+
+        need = self.worker.needs_resample(wstate) & active
+        wstate, resample_cost = jax.lax.cond(
+            jnp.any(need),
+            lambda op: self.worker.resample_round(op[0], op[1]),
+            lambda op: (op[0], jnp.zeros((w,), jnp.float32)),
+            (wstate, need),
+        )
+        scan_mask = active & ~need
+        certs_pre = self.worker.certificates(wstate)
+        wstate, scan_cost, fired = self.worker.scan_round(wstate, scan_mask)
+        certs = self.worker.certificates(wstate)
+
+        cost = adopt_cost + resample_cost + scan_cost
+        clock = state.clock + cost / jnp.maximum(self._speed, 1e-12)
+
+        # --- 4. broadcast strict improvements -----------------------------
+        # (eps gates acceptance only — see the note in simulator.run)
+        improved = fired & improves(certs_pre, certs, 0.0) & scan_mask
+        d_idx = jnp.arange(depth)[None, None, :]
+        # push_mask[dst, src, d] — delay is indexed [src, dst]
+        push_mask = (
+            improved[None, :, None]
+            & alive[:, None, None]
+            & (dst_idx[:, None] != dst_idx[None, :])[:, :, None]
+            & (d_idx == (self._delay.T[:, :, None] - 1))
+        )
+        inflight = jnp.where(push_mask, certs[None, :, None], inflight)
+        n_pushed = jnp.sum(push_mask, dtype=jnp.int32)
+
+        # --- 5. snapshot the models into the ring -------------------------
+        models = self.worker.export_models(wstate)
+        ring = jax.tree_util.tree_map(
+            lambda buf, m: buf.at[r % depth].set(m), state.ring, models
+        )
+
+        new_state = EngineState(
+            worker=wstate,
+            alive=alive,
+            credit=credit,
+            clock=clock,
+            inflight=inflight,
+            ring=ring,
+            round=r + 1,
+            sent=state.sent + n_pushed,
+            accepted=state.accepted + n_taken,
+            discarded=state.discarded + (n_arrivals - n_taken),
+            cost_total=state.cost_total + jnp.sum(cost),
+        )
+        info = RoundInfo(
+            certs=certs, changed=take | improved, clock=clock, alive=alive
+        )
+        return new_state, info
+
+    # ------------------------------------------------------------------
+    def run(self) -> SimResult:
+        cfg = self.config
+        state = self._init_state()
+        certs0 = np.asarray(self.worker.certificates(state.worker))
+        history: list[tuple[float, int, float]] = [
+            (0.0, i, float(certs0[i])) for i in range(cfg.n_workers)
+        ]
+
+        rounds = 0
+        # only fetch per-round info to the host when something consumes
+        # it — a fixed-round throughput run stays free of per-round
+        # device syncs so JAX can queue steps asynchronously
+        fetch = cfg.record_history or cfg.target_certificate is not None
+        for _ in range(cfg.max_rounds):
+            state, info = self._step(state)
+            rounds += 1
+            if not fetch:
+                continue
+            certs = np.asarray(info.certs)
+            if cfg.record_history:
+                changed = np.asarray(info.changed)
+                clock = np.asarray(info.clock)
+                for i in np.flatnonzero(changed):
+                    history.append((float(clock[i]), int(i), float(certs[i])))
+            if cfg.target_certificate is not None:
+                live = np.asarray(info.alive)
+                if np.any(certs[live] <= cfg.target_certificate):
+                    break
+
+        certs = np.asarray(self.worker.certificates(state.worker))
+        models = self.worker.export_models(state.worker)
+        traffic = TrafficCounters(
+            sent=int(state.sent),
+            accepted=int(state.accepted),
+            discarded=int(state.discarded),
+            bytes_broadcast=int(state.sent) * self.worker.payload_bytes(),
+        )
+        final_models = [
+            jax.tree_util.tree_map(lambda a, i=i: a[i], models)
+            for i in range(cfg.n_workers)
+        ]
+        return SimResult.from_traffic(
+            traffic,
+            history=history,
+            final_certificates=[float(c) for c in certs],
+            final_models=final_models,
+            sim_time=float(np.asarray(state.clock).max()),
+            cost_units_total=float(state.cost_total),
+            events_processed=rounds * cfg.n_workers,
+            rounds=rounds,
+        )
+
+
+def quantize_latency(
+    base_latency: float,
+    jitter: float,
+    round_dt: float,
+    n_workers: int,
+    seed: int = 0,
+) -> np.ndarray:
+    """Quantize the simulator's continuous per-link latency model to an
+    integer (W, W) round-delay matrix: ``delay = max(1, round(lat/dt))``.
+
+    Jitter is drawn from the same U[0, jitter) distribution as the event
+    sim, but sampled ONCE per link and frozen for the whole run (the
+    engine's delay matrix is static), whereas the simulator redraws it
+    per message — expect distributional differences under jitter > 0."""
+    rng = np.random.default_rng(seed)
+    lat = base_latency + rng.uniform(0.0, max(jitter, 0.0), size=(n_workers, n_workers))
+    dt = max(round_dt, 1e-12)
+    return np.maximum(np.rint(lat / dt), 1).astype(np.int32)

@@ -1,0 +1,78 @@
+"""Shared run bookkeeping for the TMSN execution substrates.
+
+Both the event-driven :class:`~repro.core.simulator.TMSNSimulator`
+(fidelity-1 oracle: exact per-event ordering, continuous latencies) and
+the vectorized round-based :class:`~repro.core.engine.TMSNEngine`
+(fidelity-2: one segment per round, latencies quantized to rounds,
+everything batched over the worker axis) produce the same result type,
+so benchmark and analysis code is substrate-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass
+class TrafficCounters:
+    """Message accounting shared by the simulator and the engine.
+
+    The engine delivers at most one (the best) message per destination
+    per round, so its ``accepted`` counts adoptions while the event
+    simulator counts every individually-accepted RECV; the end states
+    agree (adopting the min dominates adopting a chain of decreasing
+    certificates) but the counters are substrate-level diagnostics, not
+    protocol invariants.
+    """
+
+    sent: int = 0
+    accepted: int = 0
+    discarded: int = 0
+    bytes_broadcast: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    #: (sim_time, worker_id, certificate) at every local improvement/adopt
+    history: list[tuple[float, int, float]]
+    final_certificates: list[float]
+    final_models: list[Any]
+    sim_time: float
+    messages_sent: int
+    messages_accepted: int
+    messages_discarded: int
+    bytes_broadcast: int
+    cost_units_total: float
+    events_processed: int
+    #: per-worker wall time spent blocked (always 0 for TMSN — kept so
+    #: the BSP baseline harness can report the contrast)
+    wait_time: list[float] = dataclasses.field(default_factory=list)
+    #: (sim_time, best_certificate, best_model) checkpoints
+    snapshots: list = dataclasses.field(default_factory=list)
+    #: rounds executed (round-based engine only; 0 for the event sim)
+    rounds: int = 0
+
+    def best_certificate_trace(self) -> list[tuple[float, float]]:
+        """Monotone (time, best-cert-so-far) envelope across workers."""
+        out: list[tuple[float, float]] = []
+        best = float("inf")
+        for t, _, c in sorted(self.history):
+            if c < best:
+                best = c
+                out.append((t, best))
+        return out
+
+    @classmethod
+    def from_traffic(
+        cls,
+        traffic: TrafficCounters,
+        **kw: Any,
+    ) -> "SimResult":
+        return cls(
+            messages_sent=traffic.sent,
+            messages_accepted=traffic.accepted,
+            messages_discarded=traffic.discarded,
+            bytes_broadcast=traffic.bytes_broadcast,
+            **kw,
+        )

@@ -25,6 +25,16 @@ import heapq
 from typing import Any, Callable, Protocol, Sequence
 
 from repro.core.protocol import accepts, improves
+from repro.core.result import SimResult, TrafficCounters
+
+__all__ = [
+    "TMSNWorker",
+    "WorkerSpec",
+    "SimulatorConfig",
+    "SimResult",  # re-exported; lives in repro.core.result
+    "TMSNSimulator",
+    "run_bsp_baseline",
+]
 
 
 class TMSNWorker(Protocol):
@@ -82,36 +92,6 @@ class SimulatorConfig:
     snapshot_every: int = 0
 
 
-@dataclasses.dataclass
-class SimResult:
-    #: (sim_time, worker_id, certificate) at every local improvement/adopt
-    history: list[tuple[float, int, float]]
-    final_certificates: list[float]
-    final_models: list[Any]
-    sim_time: float
-    messages_sent: int
-    messages_accepted: int
-    messages_discarded: int
-    bytes_broadcast: int
-    cost_units_total: float
-    events_processed: int
-    #: per-worker wall time spent blocked (always 0 for TMSN — kept so
-    #: the BSP baseline harness can report the contrast)
-    wait_time: list[float] = dataclasses.field(default_factory=list)
-    #: (sim_time, best_certificate, best_model) checkpoints
-    snapshots: list = dataclasses.field(default_factory=list)
-
-    def best_certificate_trace(self) -> list[tuple[float, float]]:
-        """Monotone (time, best-cert-so-far) envelope across workers."""
-        out: list[tuple[float, float]] = []
-        best = float("inf")
-        for t, _, c in sorted(self.history):
-            if c < best:
-                best = c
-                out.append((t, best))
-        return out
-
-
 _RESUME, _RECV = 0, 1
 
 
@@ -155,8 +135,7 @@ class TMSNSimulator:
 
         history: list[tuple[float, int, float]] = [(0.0, i, certs[i]) for i in range(cfg.n_workers)]
         snapshots: list = []
-        sent = accepted = discarded = 0
-        bytes_bc = 0
+        traffic = TrafficCounters()
         cost_total = 0.0
         events = 0
         now = 0.0
@@ -185,10 +164,10 @@ class TMSNSimulator:
                 if accepts(certs[wid], in_cert, cfg.eps):
                     states[wid] = self.worker.adopt(states[wid], in_model, in_cert)
                     certs[wid] = float(in_cert)
-                    accepted += 1
+                    traffic.accepted += 1
                     history.append((now, wid, certs[wid]))
                 else:
-                    discarded += 1
+                    traffic.discarded += 1
                 continue
 
             # _RESUME: run one scheduling quantum of real computation.
@@ -218,21 +197,18 @@ class TMSNSimulator:
                             heap, (t_end + lat, counter, _RECV, dst, (model, new_cert))
                         )
                         counter += 1
-                        sent += 1
-                        bytes_bc += nbytes
+                        traffic.sent += 1
+                        traffic.bytes_broadcast += nbytes
 
             heapq.heappush(heap, (t_end, counter, _RESUME, wid, None))
             counter += 1
 
-        return SimResult(
+        return SimResult.from_traffic(
+            traffic,
             history=history,
             final_certificates=certs,
             final_models=[self.worker.export_model(s) for s in states],
             sim_time=now,
-            messages_sent=sent,
-            messages_accepted=accepted,
-            messages_discarded=discarded,
-            bytes_broadcast=bytes_bc,
             cost_units_total=cost_total,
             events_processed=events,
             snapshots=snapshots,

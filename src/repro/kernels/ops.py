@@ -37,6 +37,35 @@ def edge_scan(
     return _edge_scan(xb, wy, w, num_bins=num_bins, tile_n=tile_n, interpret=interpret)
 
 
+def edge_scan_batched(
+    xb: jnp.ndarray,
+    wy: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    num_bins: int,
+    tile_n: int = 512,
+    interpret: bool | None = None,
+):
+    """Batched edge scan over a leading worker axis.
+
+    Args are the stacked counterparts of :func:`edge_scan`: ``xb``
+    (W, n, d), ``wy``/``w`` (W, n). ``vmap`` of a ``pallas_call``
+    prepends a batch dimension to the kernel grid, so all W histogram
+    accumulations run in one launch. This standalone entry point is the
+    kernel-level counterpart of what the batched Sparrow scanner does
+    implicitly (it vmaps ``scan_chunk``, which calls :func:`edge_scan`
+    inside the vmapped region — the same batch-grid lowering);
+    ``tests/test_kernels.py`` pins the two-path equivalence against W
+    independent launches.
+
+    Returns (hist (W, d, B), W_ (W,), V (W,), T (W,)).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    fn = functools.partial(_edge_scan, num_bins=num_bins, tile_n=tile_n, interpret=interpret)
+    return jax.vmap(fn)(xb, wy, w)
+
+
 def weight_update(
     xb: jnp.ndarray,
     y: jnp.ndarray,
@@ -57,4 +86,4 @@ def weight_update(
     )
 
 
-__all__ = ["edge_scan", "weight_update", "scatter_model_slice"]
+__all__ = ["edge_scan", "edge_scan_batched", "weight_update", "scatter_model_slice"]

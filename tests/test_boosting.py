@@ -267,6 +267,7 @@ class TestSparrowWorker:
         assert (masks.sum(axis=0) == 1).all()  # disjoint cover
 
 
+@pytest.mark.slow
 class TestTMSNMultiWorker:
     def test_workers_converge_to_same_certificate(self, small_data):
         xtr, ytr, _, _ = small_data

@@ -53,6 +53,33 @@ class TestEdgeScanKernel:
         out512 = ops.edge_scan(xb, wy, w, num_bins=8, tile_n=512, interpret=True)
         np.testing.assert_allclose(np.asarray(out128[0]), np.asarray(out512[0]), rtol=1e-5)
 
+    def test_batched_matches_per_worker(self):
+        """vmap over the pallas_call (one launch, batch grid dim) must
+        equal W independent kernel calls — the batched-scanner contract."""
+        key = jax.random.PRNGKey(9)
+        W, n, d, num_bins = 3, 300, 6, 8
+        xbs, ws, ys = [], [], []
+        for i in range(W):
+            xb, w, y = _rand_inputs(jax.random.fold_in(key, i), n, d, num_bins, jnp.float32)
+            xbs.append(xb)
+            ws.append(w)
+            ys.append(y)
+        xb_b = jnp.stack(xbs)
+        w_b = jnp.stack(ws)
+        wy_b = jnp.stack([w * y for w, y in zip(ws, ys)])
+        hist_b, W_b, V_b, T_b = ops.edge_scan_batched(
+            xb_b, wy_b, w_b, num_bins=num_bins, tile_n=128, interpret=True
+        )
+        assert hist_b.shape == (W, d, num_bins)
+        for i in range(W):
+            hist, Wi, Vi, Ti = ops.edge_scan(
+                xbs[i], wy_b[i], ws[i], num_bins=num_bins, tile_n=128, interpret=True
+            )
+            np.testing.assert_allclose(np.asarray(hist_b[i]), np.asarray(hist), rtol=1e-5, atol=1e-5)
+            assert float(W_b[i]) == pytest.approx(float(Wi), rel=1e-5)
+            assert float(V_b[i]) == pytest.approx(float(Vi), rel=1e-5)
+            assert float(T_b[i]) == pytest.approx(float(Ti), rel=1e-4, abs=1e-3)
+
     def test_padding_rows_do_not_leak(self):
         """n not a multiple of tile_n: padded rows must contribute zero."""
         key = jax.random.PRNGKey(6)

@@ -118,6 +118,7 @@ class TestStepsOnHost:
         assert int(tok.max()) < cfg.vocab
 
 
+@pytest.mark.slow
 class TestTMSNSGD:
     def test_round_improves_and_certs_monotone(self):
         cfg = reduced(get_config("yi-9b"))

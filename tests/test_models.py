@@ -68,6 +68,7 @@ class TestConfigs:
             assert lo <= total <= hi, f"{arch}: {total:.2f}B not in [{lo},{hi}]"
 
 
+@pytest.mark.slow
 class TestSmokeAllArchs:
     @pytest.mark.parametrize("arch", ARCH_IDS)
     def test_reduced_train_step(self, arch, key):
@@ -104,6 +105,7 @@ class TestSmokeAllArchs:
         assert np.isfinite(np.asarray(logits)).all()
 
 
+@pytest.mark.slow
 class TestDecodeConsistency:
     @pytest.mark.parametrize("arch", ["yi_9b", "gemma3_12b", "deepseek_v3_671b", "mamba2_1p3b", "zamba2_1p2b"])
     def test_prefill_then_decode_matches_full_forward(self, arch, key):

@@ -5,6 +5,7 @@ used by the production launch layer."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.boosting import (
     BoosterConfig,
@@ -16,6 +17,10 @@ from repro.boosting.scanner import ScannerConfig
 from repro.boosting.stumps import exp_loss
 from repro.core.simulator import SimulatorConfig, TMSNSimulator, WorkerSpec
 from repro.data.splice import SpliceConfig, make_splice_like, train_test_split
+
+
+# full-pipeline convergence runs — excluded from the fast CI tier
+pytestmark = pytest.mark.slow
 
 
 def _data():
