@@ -80,7 +80,6 @@ def run(quick: bool = False) -> list[str]:
     n = 60_000 if quick else 150_000
     xb, y, _ = make_splice_like(SpliceConfig(n=n, d=48, num_bins=8, seed=0))
     xtr, ytr, xte, yte = train_test_split(xb, y)
-    n_tr = xtr.shape[0]
     eval_fn = lambda m: float(exp_loss(m, xte, yte))
 
     rounds = 50 if quick else 90
@@ -89,9 +88,9 @@ def run(quick: bool = False) -> list[str]:
     tr_goss = train_goss(xtr, ytr, bc, eval_fn)
 
     # in-memory baselines: all reads priced MEM; off-memory: DISK
-    xgb_mem = [(c * MEM, l) for c, l in zip(tr_xgb.cost, tr_xgb.metric)]
-    xgb_disk = [(c * DISK, l) for c, l in zip(tr_xgb.cost, tr_xgb.metric)]
-    goss_mem = [(c * MEM, l) for c, l in zip(tr_goss.cost, tr_goss.metric)]
+    xgb_mem = [(c * MEM, loss) for c, loss in zip(tr_xgb.cost, tr_xgb.metric)]
+    xgb_disk = [(c * DISK, loss) for c, loss in zip(tr_xgb.cost, tr_xgb.metric)]
+    goss_mem = [(c * MEM, loss) for c, loss in zip(tr_goss.cost, tr_goss.metric)]
 
     ev = 1200 if quick else 5000
     s1_curve, s1 = _sparrow_curve(xtr, ytr, xte, yte, 1, ev)
@@ -105,7 +104,7 @@ def run(quick: bool = False) -> list[str]:
     # EXPERIMENTS.md. Sparrow's final loss sits slightly above the
     # exact-greedy floor, faithfully reproducing the paper's own Fig. 4
     # observation ("baffling" slightly-worse AUPRC).
-    floor = max(min(l for _, l in xgb_mem), min(l for _, l in s1_curve))
+    floor = max(min(loss for _, loss in xgb_mem), min(loss for _, loss in s1_curve))
     targets = {"early": 0.70, "mid": 0.64, "late": round(floor * 1.02, 4)}
 
     systems = {
@@ -118,7 +117,7 @@ def run(quick: bool = False) -> list[str]:
     }
     target = targets["late"]
     rows = {
-        name: (_time_to(curve, target), min(l for _, l in curve))
+        name: (_time_to(curve, target), min(loss for _, loss in curve))
         for name, curve in systems.items()
     }
     os.makedirs(RESULTS, exist_ok=True)

@@ -58,7 +58,9 @@ def run(quick: bool = False) -> list[str]:
             "bytes": res.bytes_broadcast,
         }
         bsp = run_bsp_baseline(
-            worker, specs, SimulatorConfig(n_workers=nw, max_events=ev, seed=2, eps=0.02), rounds=ev // (nw * 4)
+            worker, specs,
+            SimulatorConfig(n_workers=nw, max_events=ev, seed=2, eps=0.02),
+            rounds=ev // (nw * 4),
         )
         bbest = int(np.argmin(bsp.final_certificates))
         out[f"bsp_{tag}"] = {
@@ -78,7 +80,8 @@ def run(quick: bool = False) -> list[str]:
         lines.append(f"protocol.tmsn_vs_bsp_rate_{tag},{out[f'rate_ratio_{tag}']:.2f},>1_means_tmsn_faster")
     lines.append(f"protocol.bsp_laggard_waitfrac,{out['bsp_laggard']['wait_frac']:.3f},barrier_idle_fraction")
     lines.append(
-        f"protocol.tmsn_msgs_accept_rate,{out['tmsn_uniform']['accepted']/max(out['tmsn_uniform']['msgs'],1):.3f},"
+        "protocol.tmsn_msgs_accept_rate,"
+        f"{out['tmsn_uniform']['accepted'] / max(out['tmsn_uniform']['msgs'], 1):.3f},"
     )
 
     # --- fail-stop: 1 of 4 workers dies early ---

@@ -14,12 +14,23 @@ per W:
 
 At W=8 the event simulator runs the same workload for a direct
 per-segment speedup ratio (`engine_speedup_vs_sim`).
+
+The *sharded* section sweeps W ∈ {64, 256, 1024} through the
+shard-mapped engine on 8 forced host devices (each sweep point is a
+subprocess so ``XLA_FLAGS=--xla_force_host_platform_device_count`` is
+set before the child's first jax import) and reports per-round wall
+clock plus gossip bytes/round — the all_gather footprint that would hit
+a real interconnect. It measures substrate throughput and traffic, not
+convergence: at W > d some workers own no features (the paper regime
+d >= W is what the single-device sweep above covers).
 """
 
 from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import time
 
 from repro.boosting import BatchedSparrowWorker, SparrowConfig, SparrowWorker
@@ -82,6 +93,88 @@ def _run_engine(xtr, ytr, w: int, max_rounds: int) -> dict:
     return out
 
 
+SHARDED_DEVICES = 8
+
+
+def _sharded_child(w: int, n_dev: int, rounds: int) -> dict:
+    """Runs inside the subprocess (forced host devices already in env):
+    one shard-mapped engine run of ``rounds`` rounds, timed after a
+    compile run, JSON result on stdout."""
+    from repro.core.engine import EngineConfig, make_engine
+    from repro.launch.mesh import make_worker_mesh
+
+    # scaled-down per-worker footprint so W=1024 fits a CPU host:
+    # d=128 features, 256-example samples (throughput/traffic profile)
+    xb, y, _ = make_splice_like(SpliceConfig(n=20_000, d=128, num_bins=8, seed=11))
+    xtr, ytr, _, _ = train_test_split(xb, y)
+    cfg = SparrowConfig(
+        sample_size=256,
+        capacity=32,
+        scanner=ScannerConfig(chunk_size=128, num_bins=8, gamma0=0.25),
+        n_workers=w,
+    )
+    worker = BatchedSparrowWorker(xtr, ytr, cfg)
+    eng = make_engine(
+        worker,
+        EngineConfig(
+            n_workers=w,
+            max_rounds=rounds,
+            seed=0,
+            record_history=False,
+            mesh=make_worker_mesh(n_dev),
+        ),
+    )
+    res = eng.run()  # compile
+    t0 = time.time()
+    res = eng.run()
+    wall = time.time() - t0
+    return {
+        "w": w,
+        "devices": n_dev,
+        "rounds": res.rounds,
+        "wall_ms_per_round": 1e3 * wall / max(res.rounds, 1),
+        "per_segment_us": 1e6 * wall / max(res.rounds * w, 1),
+        "gossip_bytes_per_round": res.gossip_bytes_per_round,
+        "gossip_mb_total": res.gossip_bytes_per_round * res.rounds / 1e6,
+        "messages_sent": res.messages_sent,
+        "messages_accepted": res.messages_accepted,
+        "best_cert": min(res.final_certificates),
+    }
+
+
+def _run_sharded(w: int, rounds: int) -> dict:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    # the forced device count only applies to the HOST platform — pin
+    # the child to cpu so a machine with a real accelerator still runs
+    # the 8-way host sweep instead of crashing on a 1-device GPU mesh
+    env["JAX_PLATFORMS"] = "cpu"
+    # appended AFTER any inherited flags: XLA flag parsing is last-wins,
+    # so the child's forced device count must come last to stick
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={SHARDED_DEVICES}"
+    ).strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in [os.path.join(root, "src"), env.get("PYTHONPATH", "")] if p
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_scaling",
+         "--sharded-child", str(w), str(SHARDED_DEVICES), str(rounds)],
+        env=env,
+        cwd=root,
+        capture_output=True,
+        text=True,
+        timeout=3600,
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded child W={w} failed:\n{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
+        )
+    # the child prints exactly one JSON line last (jax may warn above it)
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
 def run(quick: bool = False) -> list[str]:
     lines: list[str] = []
     out: dict = {}
@@ -117,12 +210,31 @@ def run(quick: bool = False) -> list[str]:
     lines.append(f"scaling.sim_w8.per_event_us,{sim_us:.0f},event_driven_oracle")
     lines.append(f"scaling.w8.engine_speedup_vs_sim,{speedup:.1f},per_segment_ratio")
 
+    # --- sharded engine sweep across forced host devices ------------------
+    rounds = 6 if quick else 20
+    for w in (64, 256, 1024):
+        res = _run_sharded(w, rounds)
+        out[f"sharded_w{w}"] = res
+        pre = f"scaling.sharded_w{w}"
+        lines.append(f"{pre}.wall_ms_per_round,{res['wall_ms_per_round']:.1f},{SHARDED_DEVICES}_devices")
+        lines.append(f"{pre}.per_segment_us,{res['per_segment_us']:.0f},")
+        lines.append(f"{pre}.gossip_bytes_per_round,{res['gossip_bytes_per_round']},all_gather_footprint")
+        lines.append(f"{pre}.messages_sent,{res['messages_sent']},{res['rounds']}_rounds")
+
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "scaling.json"), "w") as f:
         json.dump(out, f, indent=1, default=float)
     return lines
 
 
-if __name__ == "__main__":
+def _main() -> None:
+    if len(sys.argv) >= 2 and sys.argv[1] == "--sharded-child":
+        w, n_dev, rounds = (int(a) for a in sys.argv[2:5])
+        print(json.dumps(_sharded_child(w, n_dev, rounds)), flush=True)
+        return
     for line in run(quick=True):
         print(line)
+
+
+if __name__ == "__main__":
+    _main()

@@ -12,12 +12,10 @@ Claims checked:
 
 from __future__ import annotations
 
-import glob
 import json
 import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
 from repro.core.tmsn_sgd import TMSNSGDConfig, init_tmsn_state, make_tmsn_round

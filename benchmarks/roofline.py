@@ -34,7 +34,10 @@ def fmt_row(r: dict) -> str:
             f"SKIP | — | — | — | — | {r['reason'][:60]}... |"
         )
     if r.get("status") != "ok":
-        return f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | — | — | — | — | {r.get('error','')[:60]} |"
+        return (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR "
+            f"| — | — | — | — | {r.get('error', '')[:60]} |"
+        )
     t = r["terms"]
     dom = r["dominant"].replace("_s", "")
     # argument+output = resident per-device bytes (reliable); temp is the
@@ -51,7 +54,8 @@ def fmt_row(r: dict) -> str:
 
 def render(recs: list[dict]) -> str:
     lines = [
-        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) | bottleneck | useful-FLOP ratio | bytes/dev |",
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+        "| bottleneck | useful-FLOP ratio | bytes/dev |",
         "|---|---|---|---|---|---|---|---|---|",
     ]
     for r in recs:

@@ -6,7 +6,10 @@ framework-level benches. Prints ``name,value,derived`` CSV lines.
 (--full runs the paper-scale sizes; default is the quick profile so the
 suite completes on the CPU container. --json additionally writes the
 collected ``{name: value}`` dict as machine-readable JSON — the format
-CI artifacts and the BENCH_*.json trajectory share.)
+CI artifacts and the BENCH_*.json trajectory share. The JSON carries a
+``_schema`` entry with a format version and the machine shape (device
+count, backend) so the regression guard and trajectory plots can key on
+comparable runs; metric keys never start with ``_``.)
 """
 
 from __future__ import annotations
@@ -94,8 +97,19 @@ def main() -> None:
     print("name,value,derived", flush=True)
     results, failures = collect(selected, benches, quick)
     if args.json:
+        import jax
+
+        payload = {
+            "_schema": {
+                "version": 2,
+                "devices": jax.device_count(),
+                "backend": jax.default_backend(),
+                "profile": "full" if args.full else "quick",
+            },
+            **results,
+        }
         with open(args.json, "w") as f:
-            json.dump(results, f, indent=1, sort_keys=True)
+            json.dump(payload, f, indent=1, sort_keys=True)
         print(f"# wrote {len(results)} results to {args.json}", file=sys.stderr)
     if failures:
         sys.exit(1)

@@ -8,11 +8,9 @@ identical data.
 """
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
 from repro.core.tmsn_sgd import TMSNSGDConfig, init_tmsn_state, make_tmsn_round

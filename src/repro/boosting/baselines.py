@@ -33,7 +33,6 @@ from repro.boosting.stumps import (
     append_stump,
     best_stump_exact,
     empty_model,
-    predict_margin,
 )
 
 

@@ -14,6 +14,13 @@ event-driven simulator with the unbatched :class:`SparrowWorker`
 remains the fidelity-1 oracle (``tests/test_engine.py`` pins the
 per-segment equivalence of the two).
 
+The same methods trace inside the sharded engine's shard-mapped round
+step, where the leading axis is the *local* worker count: everything
+per-worker (including the feature-ownership masks) lives in the state
+pytree and shards with it, while the disk dataset (``xb``/``y``) is a
+closed-over shared read-only reference, replicated per device exactly
+as the paper's shared-disk model prescribes.
+
 Deviations from the unbatched worker, both bounded and test-pinned:
 
   * adoption cost is charged on the round it happens instead of via
@@ -40,7 +47,6 @@ from repro.boosting.scanner import (
 )
 from repro.boosting.sparrow import (
     STUMP_EVAL_COST,
-    SparrowConfig,
     SparrowWorkerBase,
     draw_sample,
 )
@@ -56,7 +62,15 @@ from repro.boosting.stumps import (
 
 
 class BatchedSparrowState(NamedTuple):
-    """Stacked per-worker state; every leaf has a leading (W,) axis."""
+    """Stacked per-worker state; every leaf has a leading (W,) axis.
+
+    Per-worker *constants* (the feature-ownership masks) live here too,
+    not on the worker object: inside the sharded engine's shard-mapped
+    round step each device sees only its local slice of the state, so
+    anything indexed by worker identity must shard along with it — a
+    closed-over ``(W, d)`` array would arrive fully replicated and
+    misaligned with the ``(W_local, ...)`` leaves.
+    """
 
     model: StumpModel  # fields (W, T), count (W,)
     cert: jnp.ndarray  # (W,) f32
@@ -70,6 +84,7 @@ class BatchedSparrowState(NamedTuple):
     resamples: jnp.ndarray  # (W,) i32
     sample_model_count: jnp.ndarray  # (W,) i32
     scan_since_resample: jnp.ndarray  # (W,) f32
+    feat_mask: jnp.ndarray  # (W, d) bool — feature ownership (constant)
 
 
 def _bwhere(cond: jnp.ndarray, new, old):
@@ -132,6 +147,7 @@ class BatchedSparrowWorker(SparrowWorkerBase):
             resamples=zeros_i,
             sample_model_count=zeros_i,
             scan_since_resample=jnp.zeros((n_workers,), jnp.float32),
+            feat_mask=self._feat_masks,
         )
 
     def certificates(self, state: BatchedSparrowState) -> jnp.ndarray:
@@ -154,7 +170,7 @@ class BatchedSparrowWorker(SparrowWorkerBase):
         m = cfg.sample_size
         scan = functools.partial(scan_chunk, config=cfg.scanner)
         scanner_s, sample_s, info = jax.vmap(scan)(
-            state.scanner, state.sample, state.model, self._feat_masks
+            state.scanner, state.sample, state.model, state.feat_mask
         )
         chunk = min(cfg.scanner.chunk_size, m)
         maskf = mask.astype(jnp.float32)

@@ -30,7 +30,6 @@ import numpy as np
 
 from repro.boosting.sampler import minimal_variance_sample
 from repro.boosting.scanner import (
-    FireInfo,
     SampleState,
     ScannerConfig,
     ScannerState,
@@ -45,7 +44,6 @@ from repro.boosting.stumps import (
     append_stump,
     empty_model,
     model_payload_bytes,
-    predict_margin,
     predict_margin_delta,
 )
 from repro.core.ess import effective_sample_size

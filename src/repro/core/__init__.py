@@ -23,8 +23,10 @@ from repro.core.engine import (
     BatchedTMSNWorker,
     EngineConfig,
     TMSNEngine,
+    make_engine,
     quantize_latency,
 )
+from repro.core.engine_sharded import ShardedTMSNEngine, sharded_engine_available
 
 __all__ = [
     "effective_sample_size",
@@ -43,5 +45,8 @@ __all__ = [
     "BatchedTMSNWorker",
     "EngineConfig",
     "TMSNEngine",
+    "ShardedTMSNEngine",
+    "make_engine",
     "quantize_latency",
+    "sharded_engine_available",
 ]

@@ -36,6 +36,22 @@ a message broadcast during round ``r`` is applied to every receiver
 
 The engine returns the same :class:`~repro.core.result.SimResult` as
 the simulator, so benchmarks and analysis are substrate-agnostic.
+
+Fidelity level 3 — the device-sharded substrate: when
+:attr:`EngineConfig.mesh` names a multi-device ``workers`` mesh,
+:func:`make_engine` returns a
+:class:`~repro.core.engine_sharded.ShardedTMSNEngine` that partitions
+the stacked ``(W, ...)`` worker state over the mesh with ``shard_map``.
+Each device advances only its ``W_local = W / n_dev`` workers per
+round; the ``(W, W, D)`` in-flight buffer becomes a per-shard
+``(W_local, W, D)`` slice (destination-sharded), and gossip is one
+explicit ``all_gather`` of the round's certificates and model payloads
+— O(W·payload) traffic per round instead of replicated global state.
+The equivalence contract is strict: on identical configs and seeds the
+sharded engine must produce the *same final certificates* as this
+single-device engine (which PR 1 in turn pins against the event-driven
+fidelity-1 oracle), including fail-stop masks and laggard credit;
+``tests/test_sharded_engine.py`` enforces it on 8 forced host devices.
 """
 
 from __future__ import annotations
@@ -116,6 +132,11 @@ class EngineConfig:
     seed: int = 0
     #: record per-worker certificate changes into SimResult.history
     record_history: bool = True
+    #: optional ``jax.sharding.Mesh`` with a ``workers`` axis. ``None``
+    #: or a 1-device mesh keeps the single-device path; a multi-device
+    #: mesh makes :func:`make_engine` build the shard-mapped engine
+    #: (``n_workers`` must divide evenly over the axis).
+    mesh: Any = None
 
 
 class EngineState(NamedTuple):
@@ -179,7 +200,12 @@ class TMSNEngine:
             raise ValueError(f"fail_round must be ({w},), got {fail.shape}")
         self._fail_round = jnp.asarray(fail, jnp.int32)
 
-        self._step = jax.jit(self._round_step)
+        self._step = self._build_step()
+
+    def _build_step(self):
+        """Jitted ``state -> (state, RoundInfo)``; the sharded engine
+        overrides this to wrap the round step in ``shard_map``."""
+        return jax.jit(self._round_step)
 
     # ------------------------------------------------------------------
     def _init_state(self) -> EngineState:
@@ -330,11 +356,14 @@ class TMSNEngine:
 
         certs = np.asarray(self.worker.certificates(state.worker))
         models = self.worker.export_models(state.worker)
-        traffic = TrafficCounters(
-            sent=int(state.sent),
-            accepted=int(state.accepted),
-            discarded=int(state.discarded),
-            bytes_broadcast=int(state.sent) * self.worker.payload_bytes(),
+        # counters are () scalars on the single-device engine and
+        # (n_devices,) per-shard partials on the sharded one; np.sum
+        # covers both (the per-shard reduction happens here, once)
+        traffic = TrafficCounters.from_shards(
+            sent=np.asarray(state.sent),
+            accepted=np.asarray(state.accepted),
+            discarded=np.asarray(state.discarded),
+            payload_bytes=self.worker.payload_bytes(),
         )
         final_models = [
             jax.tree_util.tree_map(lambda a, i=i: a[i], models)
@@ -346,10 +375,15 @@ class TMSNEngine:
             final_certificates=[float(c) for c in certs],
             final_models=final_models,
             sim_time=float(np.asarray(state.clock).max()),
-            cost_units_total=float(state.cost_total),
+            cost_units_total=float(np.sum(np.asarray(state.cost_total))),
             events_processed=rounds * cfg.n_workers,
             rounds=rounds,
+            gossip_bytes_per_round=self._gossip_bytes_per_round(),
         )
+
+    def _gossip_bytes_per_round(self) -> int:
+        """Cross-device exchange footprint per round; 0 on one device."""
+        return 0
 
 
 def quantize_latency(
@@ -370,3 +404,21 @@ def quantize_latency(
     lat = base_latency + rng.uniform(0.0, max(jitter, 0.0), size=(n_workers, n_workers))
     dt = max(round_dt, 1e-12)
     return np.maximum(np.rint(lat / dt), 1).astype(np.int32)
+
+
+def make_engine(worker: BatchedTMSNWorker, config: EngineConfig) -> TMSNEngine:
+    """Build the right engine for ``config.mesh``.
+
+    ``mesh=None`` or a 1-device mesh falls back to the single-device
+    :class:`TMSNEngine` (the sharded path would only add collective
+    overhead); a multi-device mesh with a ``workers`` axis builds the
+    shard-mapped :class:`~repro.core.engine_sharded.ShardedTMSNEngine`.
+    """
+    mesh = config.mesh
+    if mesh is None or mesh.size == 1:
+        return TMSNEngine(worker, config)
+    if "workers" not in mesh.axis_names:
+        raise ValueError(f"engine mesh needs a 'workers' axis, got {mesh.axis_names}")
+    from repro.core.engine_sharded import ShardedTMSNEngine
+
+    return ShardedTMSNEngine(worker, config)

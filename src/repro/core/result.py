@@ -13,6 +13,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class TrafficCounters:
@@ -30,6 +32,22 @@ class TrafficCounters:
     accepted: int = 0
     discarded: int = 0
     bytes_broadcast: int = 0
+
+    @classmethod
+    def from_shards(cls, sent: Any, accepted: Any, discarded: Any, payload_bytes: int) -> "TrafficCounters":
+        """Reduce per-shard partial counters into global totals.
+
+        The sharded engine keeps one partial counter per device (summing
+        inside the shard-mapped step would cost a ``psum`` per round);
+        the single-device engine passes () scalars. ``np.sum`` handles
+        both shapes, so this is the one place the reduction lives.
+        """
+        return cls(
+            sent=int(np.sum(sent)),
+            accepted=int(np.sum(accepted)),
+            discarded=int(np.sum(discarded)),
+            bytes_broadcast=int(np.sum(sent)) * payload_bytes,
+        )
 
 
 @dataclasses.dataclass
@@ -52,6 +70,10 @@ class SimResult:
     snapshots: list = dataclasses.field(default_factory=list)
     #: rounds executed (round-based engine only; 0 for the event sim)
     rounds: int = 0
+    #: cross-device gossip exchange footprint per round in bytes (the
+    #: sharded engine's all_gather of certificates + model payloads;
+    #: 0 for the event sim and the single-device engine)
+    gossip_bytes_per_round: int = 0
 
     def best_certificate_trace(self) -> list[tuple[float, float]]:
         """Monotone (time, best-cert-so-far) envelope across workers."""

@@ -66,6 +66,47 @@ def edge_scan_batched(
     return jax.vmap(fn)(xb, wy, w)
 
 
+def edge_scan_sharded(
+    xb: jnp.ndarray,
+    wy: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    mesh,
+    num_bins: int,
+    tile_n: int = 512,
+    interpret: bool | None = None,
+):
+    """:func:`edge_scan_batched` sharded over a ``workers`` mesh axis.
+
+    The kernel-level counterpart of the sharded engine's scan path:
+    ``shard_map`` partitions the leading worker axis over the mesh, and
+    each device runs the vmapped ``pallas_call`` on only its local
+    worker shard — per-worker histograms need no collective at all (the
+    (d, B) accumulation is private to a worker), so the whole scan is
+    embarrassingly parallel and the launch grid per device shrinks from
+    W to W_local. ``tests/test_kernels.py`` pins the output against the
+    unsharded batched path when multiple devices are visible.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if interpret is None:
+        interpret = _default_interpret()
+    if xb.shape[0] % mesh.shape["workers"]:
+        raise ValueError(
+            f"worker axis {xb.shape[0]} must divide over {mesh.shape['workers']} devices"
+        )
+    fn = functools.partial(_edge_scan, num_bins=num_bins, tile_n=tile_n, interpret=interpret)
+    sharded = shard_map(
+        lambda a, b, c: jax.vmap(fn)(a, b, c),
+        mesh=mesh,
+        in_specs=(P("workers"), P("workers"), P("workers")),
+        out_specs=(P("workers"), P("workers"), P("workers"), P("workers")),
+        check_rep=False,
+    )
+    return sharded(xb, wy, w)
+
+
 def weight_update(
     xb: jnp.ndarray,
     y: jnp.ndarray,
@@ -86,4 +127,10 @@ def weight_update(
     )
 
 
-__all__ = ["edge_scan", "edge_scan_batched", "weight_update", "scatter_model_slice"]
+__all__ = [
+    "edge_scan",
+    "edge_scan_batched",
+    "edge_scan_sharded",
+    "weight_update",
+    "scatter_model_slice",
+]

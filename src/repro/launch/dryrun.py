@@ -62,7 +62,7 @@ from repro.launch.steps import (
     opt_config_for,
     shape_applicable,
 )
-from repro.models import init_cache, init_params
+from repro.models import init_params
 from repro.models.config import ArchConfig
 from repro.optim import init_opt_state
 
@@ -75,7 +75,10 @@ _DTYPE_BYTES = {
 }
 
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
-_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)"
+    r"\[([0-9,]*)\]"
+)
 
 
 def _shape_bytes(text: str) -> int:

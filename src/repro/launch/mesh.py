@@ -24,6 +24,24 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_worker_mesh(num_devices: int | None = None):
+    """1-D ``workers`` mesh for the device-sharded TMSN engine.
+
+    ``num_devices=None`` takes every visible device (on CI that is the
+    8 forced host devices from ``--xla_force_host_platform_device_count``;
+    on a TPU pod slice, the real chips). The engine shards the stacked
+    ``(W, ...)`` worker state over this axis, so ``n_workers`` must be
+    a multiple of the mesh size.
+    """
+    if num_devices is None:
+        num_devices = len(jax.devices())
+    if num_devices < 1 or num_devices > len(jax.devices()):
+        raise ValueError(
+            f"num_devices={num_devices} not in [1, {len(jax.devices())}] visible devices"
+        )
+    return jax.make_mesh((num_devices,), ("workers",))
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """Axes the global batch is sharded over."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -13,7 +13,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.models import decode_step, init_cache, init_params, loss_fn
+from repro.models import decode_step, init_cache, loss_fn
 from repro.models.config import ArchConfig
 from repro.optim import AdamWConfig, apply_updates
 

@@ -22,7 +22,7 @@ from repro.configs import get_config, reduced
 from repro.data.tokens import TokenPipeline
 from repro.launch.steps import make_train_step
 from repro.models import init_params
-from repro.optim import AdamWConfig, init_opt_state, warmup_cosine
+from repro.optim import AdamWConfig, init_opt_state
 
 
 def train_sync(cfg, args) -> dict:

@@ -219,7 +219,9 @@ def mla_decode(
     q_lat, q_rope = _mla_q(params, x, positions, cfg)
     c_new, r_new = _mla_kv_latent(params, x, positions, cfg)
     cache_ckv = jax.lax.dynamic_update_slice_in_dim(cache_ckv, c_new.astype(cache_ckv.dtype), pos, axis=1)
-    cache_krope = jax.lax.dynamic_update_slice_in_dim(cache_krope, r_new.astype(cache_krope.dtype), pos, axis=1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, r_new.astype(cache_krope.dtype), pos, axis=1
+    )
     S = cache_ckv.shape[1]
     kpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (b, S))
     mask = _causal_window_mask(positions, kpos, None)

@@ -9,17 +9,16 @@ while still getting a per-application KV cache slot.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn
-from repro.models.config import ArchConfig, LayerSpec, encoder_segments, layer_segments
+from repro.models.config import ArchConfig, LayerSpec
 from repro.models.layers import apply_mlp, init_mlp, init_rms_norm, rms_norm
 from repro.models.moe import apply_moe, init_moe
-from repro.models.ssm import init_ssm, ssd_decode, ssd_full, ssm_dims
+from repro.models.ssm import init_ssm, ssd_decode, ssd_full
 
 
 # ----------------------------------------------------------------------------

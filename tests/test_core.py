@@ -1,6 +1,5 @@
 """Unit + property tests for the TMSN core (stopping rule, ESS, protocol)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

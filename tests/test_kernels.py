@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.boosting.stumps import append_stump, empty_model
+from repro.core.engine_sharded import sharded_engine_available
 from repro.kernels import ops
 from repro.kernels.ref import edge_scan_ref, margin_delta_oracle, weight_update_ref
 from repro.kernels.weight_update import scatter_model_slice
@@ -79,6 +80,34 @@ class TestEdgeScanKernel:
             assert float(W_b[i]) == pytest.approx(float(Wi), rel=1e-5)
             assert float(V_b[i]) == pytest.approx(float(Vi), rel=1e-5)
             assert float(T_b[i]) == pytest.approx(float(Ti), rel=1e-4, abs=1e-3)
+
+    @pytest.mark.skipif(
+        not sharded_engine_available(), reason="sharded edge scan needs >=2 devices"
+    )
+    def test_sharded_matches_batched(self):
+        """shard_map over the workers axis (each device runs the vmapped
+        pallas_call on its local shard) must equal the single-device
+        batched launch — the sharded-engine scan-path contract."""
+        from repro.launch.mesh import make_worker_mesh
+
+        key = jax.random.PRNGKey(13)
+        n_dev = len(jax.devices())
+        W, n, d, num_bins = 2 * n_dev, 300, 6, 8
+        xb_b = jnp.stack(
+            [_rand_inputs(jax.random.fold_in(key, i), n, d, num_bins, jnp.float32)[0]
+             for i in range(W)]
+        )
+        per = [_rand_inputs(jax.random.fold_in(key, 100 + i), n, d, num_bins, jnp.float32)
+               for i in range(W)]
+        w_b = jnp.stack([w for _, w, _ in per])
+        wy_b = jnp.stack([w * y for _, w, y in per])
+        ref = ops.edge_scan_batched(xb_b, wy_b, w_b, num_bins=num_bins, tile_n=128, interpret=True)
+        got = ops.edge_scan_sharded(
+            xb_b, wy_b, w_b, mesh=make_worker_mesh(), num_bins=num_bins, tile_n=128,
+            interpret=True,
+        )
+        for g, r in zip(got, ref):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(r), rtol=1e-5, atol=1e-5)
 
     def test_padding_rows_do_not_leak(self):
         """n not a multiple of tile_n: padded rows must contribute zero."""

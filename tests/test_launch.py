@@ -1,9 +1,6 @@
 """Launch-layer tests: sharding rules, step functions on the host mesh,
 TMSN-SGD round, optimizer, checkpoint, input specs."""
 
-import dataclasses
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -32,8 +29,9 @@ class TestShardingRules:
         sizes = {"data": 16, "model": 16}
         assert fit_spec(P("model", "data"), (50280, 2048), sizes) == P(None, "data")
         assert fit_spec(P("data", "model"), (4096, 11008), sizes) == P("data", "model")
-        assert fit_spec(P(("pod", "data"), None), (32, 128), {"pod": 2, "data": 16, "model": 16}) == P(("pod", "data"), None)
-        assert fit_spec(P(("pod", "data"), None), (31, 128), {"pod": 2, "data": 16, "model": 16}) == P(None, None)
+        sizes = {"pod": 2, "data": 16, "model": 16}
+        assert fit_spec(P(("pod", "data"), None), (32, 128), sizes) == P(("pod", "data"), None)
+        assert fit_spec(P(("pod", "data"), None), (31, 128), sizes) == P(None, None)
 
     def test_param_pspecs_cover_all_archs(self):
         for arch in ("yi-9b", "deepseek-v3-671b", "mamba2-1.3b", "zamba2-1.2b", "whisper-large-v3"):
@@ -74,7 +72,7 @@ class TestInputSpecs:
         d = decode_specs(cfg, "decode_32k")
         assert d["token"].shape == (128, 1)
         leaves = jax.tree.leaves(d["caches"])
-        assert all(l.shape[2] == 32768 for l in leaves if len(l.shape) == 5)
+        assert all(x.shape[2] == 32768 for x in leaves if len(x.shape) == 5)
 
     def test_long_500k_applicability(self):
         assert shape_applicable(get_config("mamba2-1.3b"), "long_500k")[0]

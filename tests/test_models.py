@@ -7,14 +7,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, all_configs, get_config, reduced
+from repro.configs import ARCH_IDS, get_config, reduced
 from repro.data.tokens import synthetic_token_batch
 from repro.models import (
     decode_step,
     init_cache,
     init_params,
     loss_fn,
-    param_count,
     prefill,
 )
 from repro.models.config import layer_segments, validate
@@ -107,7 +106,9 @@ class TestSmokeAllArchs:
 
 @pytest.mark.slow
 class TestDecodeConsistency:
-    @pytest.mark.parametrize("arch", ["yi_9b", "gemma3_12b", "deepseek_v3_671b", "mamba2_1p3b", "zamba2_1p2b"])
+    @pytest.mark.parametrize(
+        "arch", ["yi_9b", "gemma3_12b", "deepseek_v3_671b", "mamba2_1p3b", "zamba2_1p2b"]
+    )
     def test_prefill_then_decode_matches_full_forward(self, arch, key):
         """Teacher-forced decode must reproduce the full-sequence logits:
         run s steps of decode_step from an empty cache and compare with

@@ -1,0 +1,282 @@
+"""Sharded/unsharded engine equivalence.
+
+The single-device ``TMSNEngine`` is pinned against the event-driven
+fidelity-1 oracle in ``tests/test_engine.py``; these tests close the
+chain by pinning the shard-mapped engine against the single-device one:
+on identical configs and seeds the final certificates must be
+IDENTICAL — including fail-stop masks, laggard compute credit, and
+per-link round delays — so sharding is a pure execution-substrate
+choice with no protocol semantics of its own.
+
+Needs >= 2 devices; CI's ``fast-multidevice`` leg forces 8 host devices
+via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``. On a
+single-device run the whole module skips.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.boosting import BatchedSparrowWorker, SparrowConfig
+from repro.boosting.scanner import ScannerConfig
+from repro.core.engine import EngineConfig, TMSNEngine, make_engine, quantize_latency
+from repro.core.engine_sharded import ShardedTMSNEngine, sharded_engine_available
+from repro.data.splice import SpliceConfig, make_splice_like, train_test_split
+from repro.launch.mesh import make_worker_mesh
+
+pytestmark = pytest.mark.skipif(
+    not sharded_engine_available(),
+    reason="sharded engine needs >=2 devices "
+    "(CI forces 8 via --xla_force_host_platform_device_count)",
+)
+
+
+def _mesh_for(w: int):
+    """Largest worker mesh the visible devices support for W workers."""
+    n = len(jax.devices())
+    while w % n:
+        n -= 1
+    return make_worker_mesh(n)
+
+
+# ---------------------------------------------------------------------------
+# Toy worker, sharding-contract compliant: every per-worker constant
+# (period, dec, global worker id) lives IN the state so it shards along
+# with the worker axis — the contract the engine_sharded docstring
+# spells out (test_engine.py's toy closes over (W,) arrays instead,
+# which is exactly what breaks under shard_map).
+# ---------------------------------------------------------------------------
+
+
+class ShardableToyWorker:
+    def __init__(self, period, dec):
+        self._period = jnp.asarray(period, jnp.int32)
+        self._dec = jnp.asarray(dec, jnp.float32)
+
+    def init_batch(self, n_workers, seed):
+        z = jnp.zeros((n_workers,), jnp.int32)
+        return {
+            "segs": z,
+            "fires": z,
+            "cert": jnp.zeros((n_workers,), jnp.float32),
+            "from": jnp.full((n_workers,), -1, jnp.int32),
+            "owner": jnp.arange(n_workers, dtype=jnp.int32),
+            "period": self._period,
+            "dec": self._dec,
+        }
+
+    def scan_round(self, state, mask):
+        segs = state["segs"] + mask.astype(jnp.int32)
+        fired = mask & (segs % state["period"] == 0)
+        fires = state["fires"] + fired.astype(jnp.int32)
+        own = -state["dec"] * fires
+        cert = jnp.where(fired, jnp.minimum(state["cert"], own), state["cert"])
+        new = dict(state, segs=segs, fires=fires, cert=cert)
+        return new, mask.astype(jnp.float32), fired
+
+    def needs_resample(self, state):
+        return jnp.zeros(state["cert"].shape, bool)
+
+    def resample_round(self, state, do):
+        return state, jnp.zeros(state["cert"].shape, jnp.float32)
+
+    def certificates(self, state):
+        return state["cert"]
+
+    def export_models(self, state):
+        return {"owner": state["owner"], "cert": state["cert"], "adopted_from": state["from"]}
+
+    def adopt_batch(self, state, models, certs, take):
+        new = dict(state)
+        new["cert"] = jnp.where(take, certs, state["cert"])
+        new["from"] = jnp.where(take, models["owner"], state["from"])
+        return new, jnp.zeros(state["cert"].shape, jnp.float32)
+
+    def payload_bytes(self):
+        return 8
+
+
+def _run_pair(period, dec, **cfg):
+    """(single-device result, sharded result) on identical configs."""
+    w = len(period)
+    res1 = TMSNEngine(ShardableToyWorker(period, dec), EngineConfig(n_workers=w, **cfg)).run()
+    eng = make_engine(
+        ShardableToyWorker(period, dec),
+        EngineConfig(n_workers=w, mesh=_mesh_for(w), **cfg),
+    )
+    assert isinstance(eng, ShardedTMSNEngine)
+    return res1, eng.run()
+
+
+class TestToyEquivalence:
+    def test_single_sender_identical(self):
+        w = 16
+        res1, res8 = _run_pair(
+            [1] + [10**9] * (w - 1),
+            [0.1] * w,
+            delay_rounds=1,
+            target_certificate=-0.95,
+            max_rounds=500,
+        )
+        assert res8.final_certificates == res1.final_certificates
+        assert res8.rounds == res1.rounds
+        # traffic counters are per-shard partials; the reduced totals
+        # must match the single-device scalars exactly
+        assert res8.messages_sent == res1.messages_sent
+        assert res8.messages_accepted == res1.messages_accepted
+        assert res8.messages_discarded == res1.messages_discarded
+        # ring routing across shards: every adopter took worker 0's model
+        assert all(int(m["adopted_from"]) == 0 for m in res8.final_models[1:])
+
+    def test_fail_stop_mask_identical(self):
+        w = 8
+        fail = [5] + [10**6] * (w - 1)
+        res1, res8 = _run_pair(
+            [1] + [10**9] * (w - 1), [0.1] * w, fail_round=fail, max_rounds=30
+        )
+        assert res8.final_certificates == res1.final_certificates
+        assert res8.rounds == res1.rounds == 30  # no stall after the death
+
+    def test_laggard_credit_identical(self):
+        w = 8
+        speed = [1.0] * (w - 2) + [0.25, 0.5]
+        res1, res8 = _run_pair([1] * w, [0.1] * w, speed=speed, max_rounds=40)
+        assert res8.final_certificates == res1.final_certificates
+        assert res8.sim_time == res1.sim_time
+
+    def test_link_delay_matrix_identical(self):
+        w = 8
+        delays = quantize_latency(0.05, 0.02, 0.05, w, seed=1)
+        res1, res8 = _run_pair(
+            [1, 2] * (w // 2), [0.05 * (i + 1) for i in range(w)],
+            delay_rounds=delays, max_rounds=25,
+        )
+        assert res8.final_certificates == res1.final_certificates
+        assert res8.messages_sent == res1.messages_sent
+        assert res8.messages_discarded == res1.messages_discarded
+
+    def test_gossip_bytes_reported(self):
+        _, res8 = _run_pair([1] * 8, [0.1] * 8, max_rounds=5)
+        # all_gather of payload (8B) + f32 cert + fired flag, per worker
+        assert res8.gossip_bytes_per_round == 8 * (8 + 4 + 1)
+
+
+class TestFactory:
+    def test_none_and_single_device_mesh_fall_back(self):
+        toy = ShardableToyWorker([1] * 4, [0.1] * 4)
+        eng = make_engine(toy, EngineConfig(n_workers=4, mesh=None))
+        assert type(eng) is TMSNEngine
+        eng = make_engine(toy, EngineConfig(n_workers=4, mesh=make_worker_mesh(1)))
+        assert type(eng) is TMSNEngine
+
+    def test_rejects_bad_mesh(self):
+        toy = ShardableToyWorker([1] * 4, [0.1] * 4)
+        bad = jax.make_mesh((len(jax.devices()),), ("data",))
+        with pytest.raises(ValueError, match="workers"):
+            make_engine(toy, EngineConfig(n_workers=4, mesh=bad))
+
+    def test_rejects_indivisible_worker_count(self):
+        n = len(jax.devices())
+        w = n + 1  # never divisible by n >= 2
+        toy = ShardableToyWorker([1] * w, [0.1] * w)
+        with pytest.raises(ValueError, match="divide"):
+            make_engine(toy, EngineConfig(n_workers=w, mesh=make_worker_mesh(n)))
+
+
+# ---------------------------------------------------------------------------
+# The real batched Sparrow worker through the sharded engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    xb, y, _ = make_splice_like(SpliceConfig(n=20_000, d=16, num_bins=8, seed=3))
+    return train_test_split(xb, y)
+
+
+def _sparrow_cfg(w, **kw):
+    base = dict(
+        sample_size=1024,
+        capacity=48,
+        scanner=ScannerConfig(chunk_size=256, num_bins=8, gamma0=0.25),
+        n_workers=w,
+    )
+    base.update(kw)
+    return SparrowConfig(**base)
+
+
+def _assert_same_run(res1, res8):
+    assert res8.final_certificates == res1.final_certificates
+    assert res8.messages_sent == res1.messages_sent
+    assert res8.messages_accepted == res1.messages_accepted
+    for m1, m8 in zip(res1.final_models, res8.final_models):
+        assert int(m8.count) == int(m1.count)
+        np.testing.assert_array_equal(np.asarray(m8.feat), np.asarray(m1.feat))
+        np.testing.assert_array_equal(np.asarray(m8.alpha), np.asarray(m1.alpha))
+
+
+class TestSparrowEquivalence:
+    def test_scan_and_gossip_identical(self, small_data):
+        xtr, ytr, _, _ = small_data
+        w = 8
+        cfg = _sparrow_cfg(w)
+        ecfg = dict(n_workers=w, max_rounds=50, seed=0)
+        res1 = TMSNEngine(BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg)).run()
+        res8 = make_engine(
+            BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg, mesh=_mesh_for(w))
+        ).run()
+        _assert_same_run(res1, res8)
+        assert min(res8.final_certificates) < 0.0  # actually learned
+
+    def test_resample_path_identical(self, small_data):
+        """Aggressive ESS threshold forces the lax.map resample path
+        inside the shard-mapped step; RNG streams live in the sharded
+        state so redraws must stay bit-identical."""
+        xtr, ytr, _, _ = small_data
+        w = 4
+        cfg = _sparrow_cfg(w, ess_threshold=0.9)
+        ecfg = dict(n_workers=w, max_rounds=40, seed=0)
+        res1 = TMSNEngine(BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg)).run()
+        res8 = make_engine(
+            BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg, mesh=_mesh_for(w))
+        ).run()
+        _assert_same_run(res1, res8)
+
+    def test_heterogeneous_identical(self, small_data):
+        """Laggard + fail-stop + jittered link delays, both substrates."""
+        xtr, ytr, _, _ = small_data
+        w = 8
+        cfg = _sparrow_cfg(w)
+        speed = np.ones(w)
+        speed[-1] = 0.25
+        fail = np.full(w, 10**6)
+        fail[-2] = 15
+        delays = quantize_latency(0.05, 0.02, 0.05, w, seed=1)
+        ecfg = dict(
+            n_workers=w, delay_rounds=delays, speed=speed, fail_round=fail,
+            max_rounds=40, seed=0,
+        )
+        res1 = TMSNEngine(BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg)).run()
+        res8 = make_engine(
+            BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg, mesh=_mesh_for(w))
+        ).run()
+        _assert_same_run(res1, res8)
+
+    def test_kernel_scan_path_identical(self, small_data):
+        """ScannerConfig.use_kernel routes the sharded scan through the
+        vmapped Pallas edge_scan inside shard_map."""
+        xtr, ytr, _, _ = small_data
+        w = 4
+        cfg = _sparrow_cfg(
+            w,
+            sample_size=256,
+            capacity=16,
+            scanner=ScannerConfig(chunk_size=128, num_bins=8, gamma0=0.25, use_kernel=True),
+        )
+        ecfg = dict(n_workers=w, max_rounds=12, seed=0)
+        res1 = TMSNEngine(BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg)).run()
+        res8 = make_engine(
+            BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg, mesh=_mesh_for(w))
+        ).run()
+        _assert_same_run(res1, res8)

@@ -103,7 +103,6 @@ class TestTrainerPath:
         import dataclasses
 
         from repro.configs import get_config
-        from repro.data.tokens import TokenPipeline
         from repro.launch.steps import make_train_step
         from repro.models import init_params
         from repro.optim import AdamWConfig, init_opt_state
