@@ -15,14 +15,23 @@ per W:
 At W=8 the event simulator runs the same workload for a direct
 per-segment speedup ratio (`engine_speedup_vs_sim`).
 
+The *dispatch* section reruns W=128 with
+``rounds_per_dispatch ∈ {1, 8, 32}``: one jitted ``lax.scan`` chunk per
+dispatch instead of one Python dispatch + host sync per round — the
+wall/round at chunk 1 vs 8 is the measured dispatch overhead.
+
 The *sharded* section sweeps W ∈ {64, 256, 1024} through the
 shard-mapped engine on 8 forced host devices (each sweep point is a
 subprocess so ``XLA_FLAGS=--xla_force_host_platform_device_count`` is
 set before the child's first jax import) and reports per-round wall
 clock plus gossip bytes/round — the all_gather footprint that would hit
-a real interconnect. It measures substrate throughput and traffic, not
-convergence: at W > d some workers own no features (the paper regime
-d >= W is what the single-device sweep above covers).
+a real interconnect (plus a derived lower-bound ICI-link wire time).
+W ∈ {256, 1024} additionally run with ``gossip_mode="gated"``: payloads
+move only for each device's top-k improved candidates, and the parent
+checks the final certificates stay IDENTICAL to dense (uniform delay)
+while gossip bytes/round collapse. It measures substrate throughput and
+traffic, not convergence: at W > d some workers own no features (the
+paper regime d >= W is what the single-device sweep above covers).
 """
 
 from __future__ import annotations
@@ -32,6 +41,8 @@ import os
 import subprocess
 import sys
 import time
+
+import numpy as np
 
 from repro.boosting import BatchedSparrowWorker, SparrowConfig, SparrowWorker
 from repro.boosting.scanner import ScannerConfig
@@ -74,6 +85,7 @@ def _run_engine(xtr, ytr, w: int, max_rounds: int) -> dict:
             target_certificate=TARGET_CERT,
             seed=0,
             record_history=False,
+            rounds_per_dispatch=8,  # explicit: baselines must not move with env overrides
         ),
     )
     res = eng.run()  # first run pays jit compilation
@@ -93,13 +105,40 @@ def _run_engine(xtr, ytr, w: int, max_rounds: int) -> dict:
     return out
 
 
+def _run_dispatch_chunk(xtr, ytr, w: int, rounds: int, rpd: int) -> dict:
+    """Fixed-round throughput run (no target, no history: zero host
+    syncs inside the loop) at a given rounds_per_dispatch."""
+    worker = BatchedSparrowWorker(xtr, ytr, _sparrow_cfg(w))
+    eng = TMSNEngine(
+        worker,
+        EngineConfig(
+            n_workers=w,
+            max_rounds=rounds,
+            seed=0,
+            record_history=False,
+            rounds_per_dispatch=rpd,
+        ),
+    )
+    eng.run()  # compile
+    t0 = time.time()
+    res = eng.run()
+    wall = time.time() - t0
+    return {
+        "rounds_per_dispatch": rpd,
+        "rounds": res.rounds,
+        "wall_ms_per_round": 1e3 * wall / max(res.rounds, 1),
+    }
+
+
 SHARDED_DEVICES = 8
 
 
-def _sharded_child(w: int, n_dev: int, rounds: int) -> dict:
+def _sharded_child(w: int, n_dev: int, rounds: int, gossip_mode: str) -> dict:
     """Runs inside the subprocess (forced host devices already in env):
     one shard-mapped engine run of ``rounds`` rounds, timed after a
     compile run, JSON result on stdout."""
+    import hashlib
+
     from repro.core.engine import EngineConfig, make_engine
     from repro.launch.mesh import make_worker_mesh
 
@@ -122,16 +161,20 @@ def _sharded_child(w: int, n_dev: int, rounds: int) -> dict:
             seed=0,
             record_history=False,
             mesh=make_worker_mesh(n_dev),
+            gossip_mode=gossip_mode,
+            rounds_per_dispatch=8,  # explicit: baselines must not move with env
         ),
     )
     res = eng.run()  # compile
     t0 = time.time()
     res = eng.run()
     wall = time.time() - t0
+    certs = np.asarray(res.final_certificates, np.float32)
     return {
         "w": w,
         "devices": n_dev,
         "rounds": res.rounds,
+        "gossip_mode": res.gossip_mode,
         "wall_ms_per_round": 1e3 * wall / max(res.rounds, 1),
         "per_segment_us": 1e6 * wall / max(res.rounds * w, 1),
         "gossip_bytes_per_round": res.gossip_bytes_per_round,
@@ -139,10 +182,13 @@ def _sharded_child(w: int, n_dev: int, rounds: int) -> dict:
         "messages_sent": res.messages_sent,
         "messages_accepted": res.messages_accepted,
         "best_cert": min(res.final_certificates),
+        # digest of ALL final certs so the parent can check dense/gated
+        # end-state identity (uniform delay) without shipping W floats
+        "certs_digest": hashlib.sha1(certs.tobytes()).hexdigest(),
     }
 
 
-def _run_sharded(w: int, rounds: int) -> dict:
+def _run_sharded(w: int, rounds: int, gossip_mode: str = "dense") -> dict:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     # the forced device count only applies to the HOST platform — pin
@@ -160,7 +206,7 @@ def _run_sharded(w: int, rounds: int) -> dict:
     )
     proc = subprocess.run(
         [sys.executable, "-m", "benchmarks.bench_scaling",
-         "--sharded-child", str(w), str(SHARDED_DEVICES), str(rounds)],
+         "--sharded-child", str(w), str(SHARDED_DEVICES), str(rounds), gossip_mode],
         env=env,
         cwd=root,
         capture_output=True,
@@ -169,7 +215,8 @@ def _run_sharded(w: int, rounds: int) -> dict:
     )
     if proc.returncode != 0:
         raise RuntimeError(
-            f"sharded child W={w} failed:\n{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
+            f"sharded child W={w} ({gossip_mode}) failed:\n"
+            f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
         )
     # the child prints exactly one JSON line last (jax may warn above it)
     return json.loads(proc.stdout.strip().splitlines()[-1])
@@ -210,7 +257,29 @@ def run(quick: bool = False) -> list[str]:
     lines.append(f"scaling.sim_w8.per_event_us,{sim_us:.0f},event_driven_oracle")
     lines.append(f"scaling.w8.engine_speedup_vs_sim,{speedup:.1f},per_segment_ratio")
 
+    # --- dispatch-chunk sweep: wall/round vs rounds_per_dispatch ----------
+    # >= 2 full chunks at the largest rpd, so every sweep point actually
+    # measures its labeled chunk size (run() clamps a chunk to the
+    # rounds remaining)
+    w = 128
+    disp_rounds = 64
+    for rpd in (1, 8, 32):
+        res = _run_dispatch_chunk(xtr, ytr, w, disp_rounds, rpd)
+        out[f"dispatch_w{w}_rpd{rpd}"] = res
+        lines.append(
+            f"scaling.dispatch_w{w}_rpd{rpd}.wall_ms_per_round,"
+            f"{res['wall_ms_per_round']:.1f},{disp_rounds}_rounds"
+        )
+    speedup = (
+        out[f"dispatch_w{w}_rpd1"]["wall_ms_per_round"]
+        / max(out[f"dispatch_w{w}_rpd8"]["wall_ms_per_round"], 1e-9)
+    )
+    out["dispatch_w128_speedup_rpd8_vs_rpd1"] = speedup
+    lines.append(f"scaling.dispatch_w{w}.speedup_rpd8_vs_rpd1,{speedup:.2f},wall_ratio")
+
     # --- sharded engine sweep across forced host devices ------------------
+    from repro.launch.mesh import ici_round_seconds
+
     rounds = 6 if quick else 20
     for w in (64, 256, 1024):
         res = _run_sharded(w, rounds)
@@ -221,6 +290,35 @@ def run(quick: bool = False) -> list[str]:
         lines.append(f"{pre}.gossip_bytes_per_round,{res['gossip_bytes_per_round']},all_gather_footprint")
         lines.append(f"{pre}.messages_sent,{res['messages_sent']},{res['rounds']}_rounds")
 
+    # gated gossip: payloads only for top-k improved candidates; end
+    # state must stay identical to dense under the (uniform) delay here
+    for w in (256, 1024):
+        res = _run_sharded(w, rounds, gossip_mode="gated")
+        out[f"sharded_w{w}_gated"] = res
+        pre = f"scaling.sharded_w{w}_gated"
+        dense = out[f"sharded_w{w}"]
+        reduction = dense["gossip_bytes_per_round"] / max(res["gossip_bytes_per_round"], 1)
+        identical = int(res["certs_digest"] == dense["certs_digest"])
+        if not identical:
+            # uniform delay: gated MUST reproduce dense exactly — a
+            # mismatch is an equivalence regression, not noise, and has
+            # to fail the bench (and with it the full CI tier) loudly
+            raise RuntimeError(
+                f"gated gossip diverged from dense at W={w} under uniform delay: "
+                f"certs digest {res['certs_digest']} != {dense['certs_digest']}"
+            )
+        lines.append(f"{pre}.wall_ms_per_round,{res['wall_ms_per_round']:.1f},{SHARDED_DEVICES}_devices")
+        lines.append(
+            f"{pre}.gossip_bytes_per_round,{res['gossip_bytes_per_round']},"
+            f"vs_{dense['gossip_bytes_per_round']}_dense"
+        )
+        lines.append(f"{pre}.gossip_reduction_x,{reduction:.1f},dense_over_gated")
+        lines.append(f"{pre}.certs_identical_to_dense,{identical},uniform_delay")
+        lines.append(
+            f"{pre}.ici_us_per_round,{1e6 * ici_round_seconds(res['gossip_bytes_per_round']):.1f},"
+            f"vs_{1e6 * ici_round_seconds(dense['gossip_bytes_per_round']):.1f}_dense"
+        )
+
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "scaling.json"), "w") as f:
         json.dump(out, f, indent=1, default=float)
@@ -230,7 +328,8 @@ def run(quick: bool = False) -> list[str]:
 def _main() -> None:
     if len(sys.argv) >= 2 and sys.argv[1] == "--sharded-child":
         w, n_dev, rounds = (int(a) for a in sys.argv[2:5])
-        print(json.dumps(_sharded_child(w, n_dev, rounds)), flush=True)
+        mode = sys.argv[5] if len(sys.argv) > 5 else "dense"
+        print(json.dumps(_sharded_child(w, n_dev, rounds, mode)), flush=True)
         return
     for line in run(quick=True):
         print(line)

@@ -156,6 +156,14 @@ class BatchedSparrowWorker(SparrowWorkerBase):
     def export_models(self, state: BatchedSparrowState) -> StumpModel:
         return state.model
 
+    def export_payload_rows(
+        self, state: BatchedSparrowState, rows: jnp.ndarray
+    ) -> StumpModel:
+        """Gather just ``rows`` of the broadcast payload — the sharded
+        engine's gated gossip ships each device's top-k improved
+        candidate models instead of the full (W_local, ...) stack."""
+        return jax.tree_util.tree_map(lambda a: a[rows], state.model)
+
     def needs_resample(self, state: BatchedSparrowState) -> jnp.ndarray:
         return state.needs_resample
 

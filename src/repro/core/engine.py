@@ -37,6 +37,17 @@ a message broadcast during round ``r`` is applied to every receiver
 The engine returns the same :class:`~repro.core.result.SimResult` as
 the simulator, so benchmarks and analysis are substrate-agnostic.
 
+Dispatch chunking: at small per-round compute the wall clock is one
+Python dispatch + one host sync *per round*. The engine therefore runs
+:attr:`EngineConfig.rounds_per_dispatch` rounds per jitted call inside
+a ``lax.scan``, returning the per-round :class:`RoundInfo` stacked over
+the chunk — one dispatch and at most one device sync per chunk, while
+per-round history and the *exact* round that crossed
+``target_certificate`` are still recovered on the host. When a target
+is set, a ``done`` flag inside the scan freezes the carried state on
+the crossing round, so the final state is bit-identical to an
+unchunked (``rounds_per_dispatch=1``) run for every chunk size.
+
 Fidelity level 3 — the device-sharded substrate: when
 :attr:`EngineConfig.mesh` names a multi-device ``workers`` mesh,
 :func:`make_engine` returns a
@@ -46,7 +57,10 @@ Each device advances only its ``W_local = W / n_dev`` workers per
 round; the ``(W, W, D)`` in-flight buffer becomes a per-shard
 ``(W_local, W, D)`` slice (destination-sharded), and gossip is one
 explicit ``all_gather`` of the round's certificates and model payloads
-— O(W·payload) traffic per round instead of replicated global state.
+— O(W·payload) traffic per round instead of replicated global state,
+or O(n_dev·k·payload) under :attr:`EngineConfig.gossip_mode` "gated",
+where only each device's top-k locally-improved candidates ship their
+model.
 The equivalence contract is strict: on identical configs and seeds the
 sharded engine must produce the *same final certificates* as this
 single-device engine (which PR 1 in turn pins against the event-driven
@@ -57,6 +71,7 @@ fidelity-1 oracle), including fail-stop masks and laggard credit;
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, NamedTuple, Protocol
 
 import jax
@@ -74,6 +89,13 @@ class BatchedTMSNWorker(Protocol):
     round step, worker computation included). States are stacked
     pytrees with a leading worker axis; certificates are ``(W,)``
     float32 arrays (lower = better).
+
+    Certificates must be monotone non-increasing over rounds (a scan
+    may only keep or lower a worker's certificate, and adoption is
+    accept-gated so it only lowers it). The protocol itself only
+    compares instantaneous values, but the sharded engine's gated
+    gossip mode leans on monotonicity for its gated==dense equivalence
+    under uniform delay — see :mod:`repro.core.engine_sharded`.
     """
 
     def init_batch(self, n_workers: int, seed: int) -> Any: ...
@@ -100,7 +122,15 @@ class BatchedTMSNWorker(Protocol):
 
     def export_models(self, state: Any) -> Any:
         """Stacked model pytree with leading worker axis (the broadcast
-        payload; must be cheap — no recomputation)."""
+        payload; must be cheap — no recomputation).
+
+        Workers may additionally implement the optional
+        ``export_payload_rows(state, rows) -> models`` hook: gather just
+        ``rows`` (a (k,) int array of worker-axis indices) of the
+        payload. The sharded engine's gated gossip mode uses it to ship
+        only the top-k locally-improved candidate models instead of the
+        full stack; absent the hook it falls back to indexing
+        ``export_models``."""
         ...
 
     def adopt_batch(
@@ -132,6 +162,33 @@ class EngineConfig:
     seed: int = 0
     #: record per-worker certificate changes into SimResult.history
     record_history: bool = True
+    #: rounds advanced per jitted dispatch (``lax.scan`` chunk). 1 =
+    #: the old one-dispatch-per-round behavior; larger chunks amortize
+    #: Python dispatch + host sync without changing any protocol
+    #: semantics (exact rounds-to-target and per-round history are
+    #: recovered from the stacked per-round info). Env-overridable so
+    #: CI can rerun the whole tier chunked: REPRO_ROUNDS_PER_DISPATCH.
+    rounds_per_dispatch: int = dataclasses.field(
+        default_factory=lambda: int(os.environ.get("REPRO_ROUNDS_PER_DISPATCH", "8"))
+    )
+    #: cross-device gossip policy of the SHARDED engine (ignored on one
+    #: device). "dense": all_gather every worker's model payload every
+    #: round — O(W·payload) on the wire. "gated": all_gather only the
+    #: cheap certificates + broadcast flags (W·5 bytes) densely; model
+    #: payloads move only for each device's top-``gossip_top_k``
+    #: locally-improved candidates — O(n_dev·k·payload). The eps gate
+    #: still applies to ACCEPTANCE only; gating shapes traffic via the
+    #: improvement test. Under uniform delay gated mode adopts models
+    #: identical to dense mode (the per-round argmin is always among
+    #: per-shard minima — pinned in tests/test_sharded_engine.py);
+    #: under heterogeneous delay matrices it is an explicit
+    #: approximation. Env-overridable: REPRO_GOSSIP_MODE.
+    gossip_mode: str = dataclasses.field(
+        default_factory=lambda: os.environ.get("REPRO_GOSSIP_MODE", "dense")
+    )
+    #: per-device candidate count for gated gossip (clamped to the
+    #: shard's local worker count)
+    gossip_top_k: int = 1
     #: optional ``jax.sharding.Mesh`` with a ``workers`` axis. ``None``
     #: or a 1-device mesh keeps the single-device path; a multi-device
     #: mesh makes :func:`make_engine` build the shard-mapped engine
@@ -141,6 +198,8 @@ class EngineConfig:
 
 class EngineState(NamedTuple):
     worker: Any
+    certs: jnp.ndarray  # (W,) f32 — post-round certificates, carried so
+    # the next round's acceptance test needs no third certificates() call
     alive: jnp.ndarray  # (W,) bool
     credit: jnp.ndarray  # (W,) f32 compute credit (laggard model)
     clock: jnp.ndarray  # (W,) f32 per-worker simulated seconds
@@ -177,6 +236,17 @@ class TMSNEngine:
         self.config = config
         w = config.n_workers
 
+        if config.gossip_mode not in ("dense", "gated"):
+            raise ValueError(
+                f"gossip_mode must be 'dense' or 'gated', got {config.gossip_mode!r}"
+            )
+        if config.gossip_top_k < 1:
+            raise ValueError(f"gossip_top_k must be >= 1, got {config.gossip_top_k}")
+        if config.rounds_per_dispatch < 1:
+            raise ValueError(
+                f"rounds_per_dispatch must be >= 1, got {config.rounds_per_dispatch}"
+            )
+
         delay = np.asarray(config.delay_rounds)
         if delay.ndim == 0:
             delay = np.full((w, w), int(delay))
@@ -200,12 +270,73 @@ class TMSNEngine:
             raise ValueError(f"fail_round must be ({w},), got {fail.shape}")
         self._fail_round = jnp.asarray(fail, jnp.int32)
 
-        self._step = self._build_step()
+        #: compiled chunk dispatchers keyed by scan length (the main
+        #: chunk size plus at most one remainder length per run)
+        self._chunks: dict[int, Any] = {}
 
-    def _build_step(self):
-        """Jitted ``state -> (state, RoundInfo)``; the sharded engine
-        overrides this to wrap the round step in ``shard_map``."""
-        return jax.jit(self._round_step)
+    # ------------------------------------------------------------------
+    # dispatch chunking: K rounds per jitted call via lax.scan
+    # ------------------------------------------------------------------
+    def _chunk_body(self, step, any_reduce):
+        """Scan body ``(state, done), _ -> ((state, done), RoundInfo)``.
+
+        ``step`` is the (possibly shard-mapped) single-round step;
+        ``any_reduce`` turns a (local) boolean vector into a scalar
+        "any worker, any shard" — ``jnp.any`` on one device, a psum on
+        the sharded engine. When ``target_certificate`` is set, ``done``
+        freezes the carried state on the crossing round so the final
+        state is identical to an unchunked run for every chunk size.
+        """
+        target = self.config.target_certificate
+
+        def frozen(state):
+            # post-crossing rounds: state passes through untouched and
+            # the round reports no changes (so host history/stop logic
+            # sees the crossing round as the last live one)
+            info = RoundInfo(
+                certs=state.certs,
+                changed=jnp.zeros_like(state.alive),
+                clock=state.clock,
+                alive=state.alive,
+            )
+            return state, info
+
+        def body(carry, _):
+            state, done = carry
+            if target is None:
+                new_state, info = step(state)
+            else:
+                # cond, not select: once done, the remaining rounds of
+                # the chunk skip the whole step (worker scan, gossip
+                # collectives, ring writes) instead of computing and
+                # discarding it. `done` derives from an all-shard
+                # reduction, so every device takes the same branch and
+                # the collectives inside stay uniform.
+                new_state, info = jax.lax.cond(done, frozen, step, state)
+                done = done | any_reduce(info.alive & (info.certs <= target))
+            return (new_state, done), info
+
+        return body
+
+    def _build_chunk(self, length: int):
+        """Jitted ``state -> (state, RoundInfo stacked over length)``;
+        the sharded engine overrides this to run the scan inside
+        ``shard_map``."""
+        body = self._chunk_body(self._round_step, jnp.any)
+
+        def chunk(state: EngineState):
+            (state, _), infos = jax.lax.scan(
+                body, (state, jnp.zeros((), bool)), None, length=length
+            )
+            return state, infos
+
+        return jax.jit(chunk)
+
+    def _chunk_fn(self, length: int):
+        fn = self._chunks.get(length)
+        if fn is None:
+            fn = self._chunks[length] = self._build_chunk(length)
+        return fn
 
     # ------------------------------------------------------------------
     def _init_state(self) -> EngineState:
@@ -215,6 +346,7 @@ class TMSNEngine:
         models = self.worker.export_models(wstate)
         return EngineState(
             worker=wstate,
+            certs=jnp.asarray(self.worker.certificates(wstate), jnp.float32),
             alive=jnp.ones((w,), bool),
             credit=jnp.zeros((w,), jnp.float32),
             clock=jnp.zeros((w,), jnp.float32),
@@ -234,7 +366,9 @@ class TMSNEngine:
         dst_idx = jnp.arange(w)
         alive = state.alive & (r < self._fail_round)
 
-        certs0 = self.worker.certificates(state.worker)
+        # last round's post-scan certificates, carried in the state (no
+        # third certificates() call per round)
+        certs0 = state.certs
 
         # --- 1. deliver arrivals due this round ---------------------------
         arr = state.inflight[:, :, 0]  # (dst, src) certs
@@ -301,13 +435,23 @@ class TMSNEngine:
         n_pushed = jnp.sum(push_mask, dtype=jnp.int32)
 
         # --- 5. snapshot the models into the ring -------------------------
+        # gated to broadcasters: ring[slot, src] is only ever read for a
+        # message src pushed at that slot's round, so non-improved
+        # workers keep their (dead) old entry instead of paying a write
         models = self.worker.export_models(wstate)
         ring = jax.tree_util.tree_map(
-            lambda buf, m: buf.at[r % depth].set(m), state.ring, models
+            lambda buf, m: buf.at[r % depth].set(
+                jnp.where(
+                    improved.reshape((-1,) + (1,) * (m.ndim - 1)), m, buf[r % depth]
+                )
+            ),
+            state.ring,
+            models,
         )
 
         new_state = EngineState(
             worker=wstate,
+            certs=certs,
             alive=alive,
             credit=credit,
             clock=clock,
@@ -328,33 +472,54 @@ class TMSNEngine:
     def run(self) -> SimResult:
         cfg = self.config
         state = self._init_state()
-        certs0 = np.asarray(self.worker.certificates(state.worker))
+        certs0 = np.asarray(state.certs)
         history: list[tuple[float, int, float]] = [
             (0.0, i, float(certs0[i])) for i in range(cfg.n_workers)
         ]
 
         rounds = 0
-        # only fetch per-round info to the host when something consumes
-        # it — a fixed-round throughput run stays free of per-round
-        # device syncs so JAX can queue steps asynchronously
+        # only fetch per-chunk info to the host when something consumes
+        # it — a fixed-round throughput run stays free of device syncs
+        # so JAX can queue whole chunks asynchronously
         fetch = cfg.record_history or cfg.target_certificate is not None
-        for _ in range(cfg.max_rounds):
-            state, info = self._step(state)
-            rounds += 1
+        k = int(cfg.rounds_per_dispatch)  # validated >= 1 in __init__
+        remaining = int(cfg.max_rounds)
+        while remaining > 0:
+            kk = min(k, remaining)
+            state, infos = self._chunk_fn(kk)(state)
+            remaining -= kk
             if not fetch:
+                rounds += kk
                 continue
-            certs = np.asarray(info.certs)
-            if cfg.record_history:
-                changed = np.asarray(info.changed)
-                clock = np.asarray(info.clock)
-                for i in np.flatnonzero(changed):
-                    history.append((float(clock[i]), int(i), float(certs[i])))
+            certs_k = np.asarray(infos.certs)  # (kk, W)
+            stop = None
             if cfg.target_certificate is not None:
-                live = np.asarray(info.alive)
-                if np.any(certs[live] <= cfg.target_certificate):
-                    break
+                # f32 target, matching the in-scan freeze comparison —
+                # a float64 host compare could disagree with the device
+                # in the ULP window around a non-f32-representable target
+                hit = np.any(
+                    (certs_k <= np.float32(cfg.target_certificate))
+                    & np.asarray(infos.alive),
+                    axis=1,
+                )
+                if hit.any():
+                    stop = int(np.argmax(hit))
+            last = kk - 1 if stop is None else stop
+            rounds += last + 1
+            if cfg.record_history:
+                # bulk append over the stacked chunk: row-major nonzero
+                # keeps (round, worker) order identical to the old
+                # per-round per-worker Python loop
+                changed_k = np.asarray(infos.changed)
+                clock_k = np.asarray(infos.clock)
+                rr, ww = np.nonzero(changed_k[: last + 1])
+                history.extend(
+                    zip(clock_k[rr, ww].tolist(), ww.tolist(), certs_k[rr, ww].tolist())
+                )
+            if stop is not None:
+                break
 
-        certs = np.asarray(self.worker.certificates(state.worker))
+        certs = np.asarray(state.certs)
         models = self.worker.export_models(state.worker)
         # counters are () scalars on the single-device engine and
         # (n_devices,) per-shard partials on the sharded one; np.sum
@@ -379,11 +544,17 @@ class TMSNEngine:
             events_processed=rounds * cfg.n_workers,
             rounds=rounds,
             gossip_bytes_per_round=self._gossip_bytes_per_round(),
+            gossip_mode=self._gossip_mode(),
         )
 
     def _gossip_bytes_per_round(self) -> int:
         """Cross-device exchange footprint per round; 0 on one device."""
         return 0
+
+    def _gossip_mode(self) -> str:
+        """Mode label for SimResult; one device has no cross-device
+        gossip, so the config knob is reported as inert."""
+        return "dense"
 
 
 def quantize_latency(

@@ -18,9 +18,40 @@ What changes relative to the single-device engine:
     interconnect (reported as ``SimResult.gossip_bytes_per_round``),
     instead of materializing every worker's full training state
     everywhere;
+  * **gated gossip** (``EngineConfig.gossip_mode="gated"``) applies the
+    paper's improvement gate to the interconnect itself: certificates
+    and broadcast flags still all_gather densely (W·5 bytes — the
+    cheap control plane), but model payloads move only for each
+    device's top-``gossip_top_k`` locally-improved candidates, so the
+    payload all_gather shrinks from O(W·payload) to O(n_dev·k·payload)
+    and receivers resolve the global argmin among the gathered
+    candidates through the existing in-flight/adopt machinery. Note
+    eps still gates ACCEPTANCE only; the strict-improvement gate is
+    what now also shapes traffic. Under uniform delay the adopted
+    model is identical to dense mode — the per-round delivery argmin
+    (lowest worker id on ties, both modes) is always its shard's
+    minimum and therefore among the gathered candidates
+    (``tests/test_sharded_engine.py`` pins this, including fail-stop,
+    laggard credit, and the Pallas scan path). The argument leans on
+    the worker-contract precondition that certificates are monotone
+    non-increasing: the one receiver whose dense-mode best arrival is
+    NOT the global minimum is the global-minimum worker itself
+    (``push_mask`` excludes self), and monotonicity guarantees the
+    same-shard runner-up that gating suppressed could never have been
+    accepted by it anyway. Under heterogeneous
+    delay matrices generations mix in the arrival slot and gated mode
+    is an explicit, *measured* approximation (``bench_scaling.py``
+    reports both modes);
   * the ``(D, W)`` model-snapshot ring is *replicated* per shard but
-    fed only by the gathered payloads, so any destination can look up
-    any source's delayed snapshot without a second exchange;
+    fed only by the gathered payloads (scattered by global worker id
+    in gated mode), so any destination can look up any source's
+    delayed snapshot without a second exchange;
+  * dispatch is chunked (``EngineConfig.rounds_per_dispatch``): the
+    whole ``lax.scan`` over K rounds runs inside ONE ``shard_map``
+    region, so per-chunk Python dispatch + host sync amortize over K
+    rounds and the per-round collectives stay inside the compiled
+    program. Target-crossing detection inside the scan uses a psum
+    across shards;
   * traffic counters are per-shard partials of shape ``(n_dev,)``
     (summing inside the step would cost a ``psum`` per round);
     :meth:`~repro.core.result.TrafficCounters.from_shards` reduces
@@ -94,10 +125,14 @@ class ShardedTMSNEngine(TMSNEngine):
         super().__init__(worker, config)
 
     # ------------------------------------------------------------------
-    def _build_step(self):
+    def _build_chunk(self, length: int):
+        """Chunk dispatcher: the whole K-round ``lax.scan`` runs inside
+        one ``shard_map`` region (collectives and the cross-shard
+        target-crossing psum stay inside the compiled program)."""
         mesh = self.config.mesh
         state_specs = EngineState(
             worker=P("workers"),
+            certs=P("workers"),
             alive=P("workers"),
             credit=P("workers"),
             clock=P("workers"),
@@ -109,8 +144,12 @@ class ShardedTMSNEngine(TMSNEngine):
             discarded=P("workers"),
             cost_total=P("workers"),
         )
-        info_specs = RoundInfo(
-            certs=P("workers"), changed=P("workers"), clock=P("workers"), alive=P("workers")
+        # stacked over the chunk: leading scan axis, worker axis second
+        infos_specs = RoundInfo(
+            certs=P(None, "workers"),
+            changed=P(None, "workers"),
+            clock=P(None, "workers"),
+            alive=P(None, "workers"),
         )
         consts_specs = _ShardConsts(
             speed=P("workers"),
@@ -118,12 +157,26 @@ class ShardedTMSNEngine(TMSNEngine):
             fail_round=P("workers"),
             delay_t=P("workers"),
         )
+
+        def _any_shard(x):
+            # scalar "any worker on any shard" — replicated across shards
+            return jax.lax.psum(jnp.any(x).astype(jnp.int32), "workers") > 0
+
+        def chunk_local(state: EngineState, consts: _ShardConsts):
+            body = self._chunk_body(
+                lambda st: self._sharded_round_step(st, consts), _any_shard
+            )
+            (state, _), infos = jax.lax.scan(
+                body, (state, jnp.zeros((), bool)), None, length=length
+            )
+            return state, infos
+
         step = jax.jit(
             shard_map(
-                self._sharded_round_step,
+                chunk_local,
                 mesh=mesh,
                 in_specs=(state_specs, consts_specs),
-                out_specs=(state_specs, info_specs),
+                out_specs=(state_specs, infos_specs),
                 check_rep=False,
             )
         )
@@ -147,9 +200,20 @@ class ShardedTMSNEngine(TMSNEngine):
         )
 
     def _gossip_bytes_per_round(self) -> int:
-        # one all_gather per round: model payload + f32 certificate +
-        # bool fired flag from every worker, landing on every shard
-        return self.config.n_workers * (self.worker.payload_bytes() + 4 + 1)
+        p = self.worker.payload_bytes()
+        w = self.config.n_workers
+        if self.config.gossip_mode == "gated":
+            # dense control plane (f32 cert + bool broadcast flag per
+            # worker) + k candidate payloads per device, each carrying
+            # an int32 global worker id
+            k = min(int(self.config.gossip_top_k), self._w_local)
+            return w * (4 + 1) + self._n_dev * k * (p + 4)
+        # dense: model payload + f32 certificate + bool fired flag from
+        # every worker, landing on every shard
+        return w * (p + 4 + 1)
+
+    def _gossip_mode(self) -> str:
+        return self.config.gossip_mode
 
     # ------------------------------------------------------------------
     def _sharded_round_step(
@@ -162,7 +226,9 @@ class ShardedTMSNEngine(TMSNEngine):
         local_ids = jax.lax.axis_index("workers") * wl + row_idx  # global dst ids
         alive = state.alive & (r < consts.fail_round)
 
-        certs0 = self.worker.certificates(state.worker)  # (wl,)
+        # last round's post-scan certificates, carried in the state (no
+        # third certificates() call per round)
+        certs0 = state.certs  # (wl,)
 
         # --- 1. deliver arrivals due this round (all-local: the buffer
         # is destination-sharded with a global source axis) -----------------
@@ -216,26 +282,81 @@ class ShardedTMSNEngine(TMSNEngine):
         cost = adopt_cost + resample_cost + scan_cost
         clock = state.clock + cost / jnp.maximum(consts.speed, 1e-12)
 
-        # --- 4+5. gossip: ONE all_gather of this round's certificates,
-        # fired flags, and model payloads; feeds both the in-flight push
-        # and the replicated snapshot ring ---------------------------------
+        # --- 4+5. gossip: certificates + broadcast flags always gather
+        # densely (the cheap control plane); model payloads gather for
+        # every worker ("dense") or only for each device's top-k
+        # locally-improved candidates ("gated") -----------------------------
         improved = fired & improves(certs_pre, certs, 0.0) & scan_mask
-        gathered = jax.lax.all_gather(
-            {
-                "certs": certs,
-                "improved": improved,
-                "models": self.worker.export_models(wstate),
-            },
-            "workers",
-            axis=0,
-            tiled=True,
-        )
-        certs_all, improved_all = gathered["certs"], gathered["improved"]  # (W,)
+        if cfg.gossip_mode == "gated":
+            k = min(int(cfg.gossip_top_k), wl)
+            # top-k local improvers by certificate; stable sort so ties
+            # break toward the lowest worker id, matching the delivery
+            # argmin (this keeps gated == dense under uniform delay)
+            score = jnp.where(improved, certs, jnp.inf)
+            cand_rows = jnp.argsort(score, stable=True)[:k]  # (k,) local rows
+            cand_valid = jnp.isfinite(score[cand_rows])  # actually improved
+            bcast = jnp.zeros((wl,), bool).at[cand_rows].set(cand_valid)
+            export_rows = getattr(self.worker, "export_payload_rows", None)
+            cand_models = (
+                export_rows(wstate, cand_rows)
+                if export_rows is not None
+                else jax.tree_util.tree_map(
+                    lambda a: a[cand_rows], self.worker.export_models(wstate)
+                )
+            )
+            # ONE collective: tiled gathers are per-leaf, so the (wl,)
+            # control plane and the (k,) payload leg ride together —
+            # at gated payload sizes the per-collective launch latency
+            # is the cost that matters
+            gathered = jax.lax.all_gather(
+                {
+                    "certs": certs,
+                    "bcast": bcast,
+                    # un-improved candidate slots point out of bounds so
+                    # the ring scatter drops them
+                    "ids": jnp.where(cand_valid, local_ids[cand_rows], w),
+                    "models": cand_models,
+                },
+                "workers",
+                axis=0,
+                tiled=True,
+            )  # certs/bcast: (W,); ids/models: (n_dev * k, ...)
+            certs_all, bcast_all = gathered["certs"], gathered["bcast"]
+            ring = jax.tree_util.tree_map(
+                lambda buf, m: buf.at[r % depth, gathered["ids"]].set(m, mode="drop"),
+                state.ring,
+                gathered["models"],
+            )
+        else:
+            gathered = jax.lax.all_gather(
+                {
+                    "certs": certs,
+                    "improved": improved,
+                    "models": self.worker.export_models(wstate),
+                },
+                "workers",
+                axis=0,
+                tiled=True,
+            )
+            certs_all, bcast_all = gathered["certs"], gathered["improved"]  # (W,)
+            # ring writes gated to broadcasters (only their entries are
+            # ever read back), mirroring the single-device engine
+            ring = jax.tree_util.tree_map(
+                lambda buf, m: buf.at[r % depth].set(
+                    jnp.where(
+                        bcast_all.reshape((-1,) + (1,) * (m.ndim - 1)),
+                        m,
+                        buf[r % depth],
+                    )
+                ),
+                state.ring,
+                gathered["models"],
+            )
 
         d_idx = jnp.arange(depth)[None, None, :]
         # push_mask[local dst, global src, d]
         push_mask = (
-            improved_all[None, :, None]
+            bcast_all[None, :, None]
             & alive[:, None, None]
             & (local_ids[:, None] != jnp.arange(w)[None, :])[:, :, None]
             & (d_idx == (consts.delay_t[:, :, None] - 1))
@@ -243,12 +364,9 @@ class ShardedTMSNEngine(TMSNEngine):
         inflight = jnp.where(push_mask, certs_all[None, :, None], inflight)
         n_pushed = jnp.sum(push_mask, dtype=jnp.int32)
 
-        ring = jax.tree_util.tree_map(
-            lambda buf, m: buf.at[r % depth].set(m), state.ring, gathered["models"]
-        )
-
         new_state = EngineState(
             worker=wstate,
+            certs=certs,
             alive=alive,
             credit=credit,
             clock=clock,

@@ -70,10 +70,16 @@ class SimResult:
     snapshots: list = dataclasses.field(default_factory=list)
     #: rounds executed (round-based engine only; 0 for the event sim)
     rounds: int = 0
-    #: cross-device gossip exchange footprint per round in bytes (the
-    #: sharded engine's all_gather of certificates + model payloads;
-    #: 0 for the event sim and the single-device engine)
+    #: cross-device gossip exchange footprint per round in bytes —
+    #: 0 for the event sim and the single-device engine. For the
+    #: sharded engine the figure is per ``gossip_mode``:
+    #:   dense: W · (payload + 4 + 1)            (every model, every round)
+    #:   gated: W · 5 + n_dev · k · (payload + 4) (certs/flags densely,
+    #:          payloads only for top-k improved candidates per device)
     gossip_bytes_per_round: int = 0
+    #: which gossip policy produced ``gossip_bytes_per_round``
+    #: ("dense" | "gated"; single-device substrates report "dense")
+    gossip_mode: str = "dense"
 
     def best_certificate_trace(self) -> list[tuple[float, float]]:
         """Monotone (time, best-cert-so-far) envelope across workers."""

@@ -51,3 +51,13 @@ def data_axes(mesh) -> tuple[str, ...]:
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
 HBM_BW = 819e9  # B/s
 ICI_BW = 50e9  # B/s per link
+
+
+def ici_round_seconds(gossip_bytes_per_round: int, bandwidth: float = ICI_BW) -> float:
+    """Lower-bound wire seconds one gossip round would spend on a single
+    ICI link, from the engine's logical ``gossip_bytes_per_round``.
+
+    A derived estimate for benchmark reporting (dense vs gated gossip),
+    not a measurement — the ROADMAP's real-interconnect item is about
+    replacing this with profiler traces on hardware."""
+    return float(gossip_bytes_per_round) / float(bandwidth)

@@ -235,6 +235,72 @@ class TestEngineSimulatorEquivalence:
 
 
 # ---------------------------------------------------------------------------
+# Dispatch chunking: K rounds per jitted lax.scan call must be a pure
+# execution-substrate choice — final certificates, history, and exact
+# rounds-to-target identical to the one-dispatch-per-round engine.
+# ---------------------------------------------------------------------------
+
+
+class TestChunkedDispatch:
+    def _run(self, rpd, **cfg):
+        w = 4
+        return TMSNEngine(
+            ToyBatchedWorker([1, 2, 10**9, 10**9], [0.1, 0.07, 0.1, 0.1]),
+            EngineConfig(n_workers=w, rounds_per_dispatch=rpd, **cfg),
+        ).run()
+
+    def test_fixed_rounds_identical(self):
+        """max_rounds not divisible by the chunk exercises the
+        remainder chunk; certs, history, and counters must match."""
+        runs = {rpd: self._run(rpd, max_rounds=21) for rpd in (1, 8, 21, 32)}
+        base = runs[1]
+        assert base.rounds == 21
+        for rpd, res in runs.items():
+            assert res.final_certificates == base.final_certificates, rpd
+            assert res.history == base.history, rpd
+            assert res.rounds == base.rounds, rpd
+            assert res.messages_sent == base.messages_sent, rpd
+            assert res.messages_accepted == base.messages_accepted, rpd
+
+    def test_target_stop_mid_chunk_identical(self):
+        """Crossing the target inside a chunk freezes the device state
+        on the crossing round: exact rounds-to-target AND a final state
+        identical to the unchunked run."""
+        runs = {rpd: self._run(rpd, target_certificate=-0.95, max_rounds=500)
+                for rpd in (1, 8)}
+        assert runs[1].rounds == runs[8].rounds == 10
+        assert runs[8].final_certificates == runs[1].final_certificates
+        assert runs[8].history == runs[1].history
+        assert runs[8].messages_sent == runs[1].messages_sent
+
+    def test_rejects_bad_chunk(self):
+        with pytest.raises(ValueError, match="rounds_per_dispatch"):
+            TMSNEngine(
+                ToyBatchedWorker([1], [0.1]),
+                EngineConfig(n_workers=1, rounds_per_dispatch=0),
+            )
+
+    def test_sparrow_chunked_identical(self, small_data):
+        """The real batched worker through chunked dispatch: same final
+        certificates and history as one dispatch per round."""
+        xtr, ytr, _, _ = small_data
+        w = 3
+        cfg = _cfg(w, sample_size=256, capacity=16,
+                   scanner=ScannerConfig(chunk_size=128, num_bins=8, gamma0=0.25))
+        runs = {}
+        for rpd in (1, 4):
+            eng = TMSNEngine(
+                BatchedSparrowWorker(xtr, ytr, cfg),
+                EngineConfig(n_workers=w, max_rounds=10, seed=0,
+                             rounds_per_dispatch=rpd),
+            )
+            runs[rpd] = eng.run()
+        assert runs[4].final_certificates == runs[1].final_certificates
+        assert runs[4].history == runs[1].history
+        assert runs[4].messages_sent == runs[1].messages_sent
+
+
+# ---------------------------------------------------------------------------
 # Batched Sparrow vs the unbatched oracle
 # ---------------------------------------------------------------------------
 
