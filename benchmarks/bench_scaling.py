@@ -32,6 +32,15 @@ checks the final certificates stay IDENTICAL to dense (uniform delay)
 while gossip bytes/round collapse. It measures substrate throughput and
 traffic, not convergence: at W > d some workers own no features (the
 paper regime d >= W is what the single-device sweep above covers).
+
+The *pod* section runs W=256 on a hierarchical (2, 4) ``(pod, workers)``
+mesh and reports the two interconnect tiers separately — intra-pod
+all_gather bytes/round (ICI) vs amortized cross-pod candidate-exchange
+bytes/round (DCN) — at ``cross_pod_every_k ∈ {1, 8}``. k=1 must match
+the flat 8-device engine bit-identically (certs digest, uniform delay;
+a mismatch fails the bench); k=8 must cut amortized DCN bytes ≥ 5x,
+and its certificate divergence from the flat run is *reported* as a
+measured approximation gap, never assumed away.
 """
 
 from __future__ import annotations
@@ -133,10 +142,13 @@ def _run_dispatch_chunk(xtr, ytr, w: int, rounds: int, rpd: int) -> dict:
 SHARDED_DEVICES = 8
 
 
-def _sharded_child(w: int, n_dev: int, rounds: int, gossip_mode: str) -> dict:
+def _sharded_child(
+    w: int, n_dev: int, rounds: int, gossip_mode: str, pods: int = 1, cross_k: int = 1
+) -> dict:
     """Runs inside the subprocess (forced host devices already in env):
     one shard-mapped engine run of ``rounds`` rounds, timed after a
-    compile run, JSON result on stdout."""
+    compile run, JSON result on stdout. ``pods > 1`` runs the
+    hierarchical (pod, workers) mesh with the given cross-pod cadence."""
     import hashlib
 
     from repro.core.engine import EngineConfig, make_engine
@@ -160,9 +172,11 @@ def _sharded_child(w: int, n_dev: int, rounds: int, gossip_mode: str) -> dict:
             max_rounds=rounds,
             seed=0,
             record_history=False,
-            mesh=make_worker_mesh(n_dev),
+            mesh=make_worker_mesh(n_dev, pods=pods),
             gossip_mode=gossip_mode,
             rounds_per_dispatch=8,  # explicit: baselines must not move with env
+            cross_pod_every_k=cross_k,  # explicit, like rounds_per_dispatch
+            cross_pod_top_k=1,
         ),
     )
     res = eng.run()  # compile
@@ -173,13 +187,18 @@ def _sharded_child(w: int, n_dev: int, rounds: int, gossip_mode: str) -> dict:
     return {
         "w": w,
         "devices": n_dev,
+        "pods": pods,
+        "cross_pod_every_k": cross_k,
         "rounds": res.rounds,
         "gossip_mode": res.gossip_mode,
         "wall_ms_per_round": 1e3 * wall / max(res.rounds, 1),
         "per_segment_us": 1e6 * wall / max(res.rounds * w, 1),
         "gossip_bytes_per_round": res.gossip_bytes_per_round,
+        "gossip_bytes_per_round_ici": res.gossip_bytes_per_round_ici,
+        "gossip_bytes_per_round_dcn": res.gossip_bytes_per_round_dcn,
         "gossip_mb_total": res.gossip_bytes_per_round * res.rounds / 1e6,
         "messages_sent": res.messages_sent,
+        "messages_sent_dcn": res.messages_sent_dcn,
         "messages_accepted": res.messages_accepted,
         "best_cert": min(res.final_certificates),
         # digest of ALL final certs so the parent can check dense/gated
@@ -188,7 +207,9 @@ def _sharded_child(w: int, n_dev: int, rounds: int, gossip_mode: str) -> dict:
     }
 
 
-def _run_sharded(w: int, rounds: int, gossip_mode: str = "dense") -> dict:
+def _run_sharded(
+    w: int, rounds: int, gossip_mode: str = "dense", pods: int = 1, cross_k: int = 1
+) -> dict:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     # the forced device count only applies to the HOST platform — pin
@@ -206,7 +227,8 @@ def _run_sharded(w: int, rounds: int, gossip_mode: str = "dense") -> dict:
     )
     proc = subprocess.run(
         [sys.executable, "-m", "benchmarks.bench_scaling",
-         "--sharded-child", str(w), str(SHARDED_DEVICES), str(rounds), gossip_mode],
+         "--sharded-child", str(w), str(SHARDED_DEVICES), str(rounds), gossip_mode,
+         str(pods), str(cross_k)],
         env=env,
         cwd=root,
         capture_output=True,
@@ -215,7 +237,7 @@ def _run_sharded(w: int, rounds: int, gossip_mode: str = "dense") -> dict:
     )
     if proc.returncode != 0:
         raise RuntimeError(
-            f"sharded child W={w} ({gossip_mode}) failed:\n"
+            f"sharded child W={w} ({gossip_mode}, pods={pods}, k={cross_k}) failed:\n"
             f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
         )
     # the child prints exactly one JSON line last (jax may warn above it)
@@ -319,6 +341,54 @@ def run(quick: bool = False) -> list[str]:
             f"vs_{1e6 * ici_round_seconds(dense['gossip_bytes_per_round']):.1f}_dense"
         )
 
+    # --- hierarchical (pod, workers) mesh: ICI vs DCN traffic tiers -------
+    # W=256 on a (2, 4) pod mesh. cross_pod_every_k=1 must reproduce the
+    # flat 8-device dense run bit-identically (uniform delay); k=8 is the
+    # approximation regime — per-k certificate divergence is REPORTED
+    # (measured, never assumed), while the amortized DCN footprint must
+    # collapse ~k-fold.
+    from repro.launch.mesh import dcn_round_seconds
+
+    w = 256
+    pod_sweep = {}
+    for k in (1, 8):
+        res = _run_sharded(w, rounds, gossip_mode="dense", pods=2, cross_k=k)
+        pod_sweep[k] = res
+        out[f"pod2_w{w}_k{k}"] = res
+        pre = f"scaling.pod2_w{w}_k{k}"
+        lines.append(f"{pre}.wall_ms_per_round,{res['wall_ms_per_round']:.1f},2x4_pod_mesh")
+        lines.append(f"{pre}.ici_bytes_per_round,{res['gossip_bytes_per_round_ici']},intra_pod_all_gather")
+        lines.append(f"{pre}.dcn_bytes_per_round,{res['gossip_bytes_per_round_dcn']},cross_pod_amortized")
+        lines.append(f"{pre}.messages_sent_dcn,{res['messages_sent_dcn']},{res['rounds']}_rounds")
+        lines.append(
+            f"{pre}.dcn_us_per_round,{1e6 * dcn_round_seconds(res['gossip_bytes_per_round_dcn']):.1f},"
+            f"derived_wire_time"
+        )
+    flat_dense = out[f"sharded_w{w}"]
+    if pod_sweep[1]["certs_digest"] != flat_dense["certs_digest"]:
+        # uniform delay + k=1: the pod mesh MUST reproduce the flat
+        # engine exactly — a mismatch is an equivalence regression and
+        # has to fail the bench (and with it the full CI tier) loudly
+        raise RuntimeError(
+            f"pod mesh diverged from the flat engine at W={w}, cross_pod_every_k=1: "
+            f"certs digest {pod_sweep[1]['certs_digest']} != {flat_dense['certs_digest']}"
+        )
+    lines.append(f"scaling.pod2_w{w}_k1.certs_identical_to_flat,1,uniform_delay")
+    dcn_drop = pod_sweep[1]["gossip_bytes_per_round_dcn"] / max(
+        pod_sweep[8]["gossip_bytes_per_round_dcn"], 1
+    )
+    if dcn_drop < 5.0:
+        raise RuntimeError(
+            f"cross_pod_every_k=8 only cut amortized DCN bytes/round {dcn_drop:.1f}x "
+            f"(expected >= 5x) at W={w}"
+        )
+    out[f"pod2_w{w}_dcn_reduction_k8_vs_k1"] = dcn_drop
+    lines.append(f"scaling.pod2_w{w}_k8.dcn_reduction_x_vs_k1,{dcn_drop:.1f},amortized")
+    # measured approximation gap, reported not asserted
+    gap = abs(pod_sweep[8]["best_cert"] - flat_dense["best_cert"])
+    out[f"pod2_w{w}_k8_best_cert_gap_vs_flat"] = gap
+    lines.append(f"scaling.pod2_w{w}_k8.best_cert_gap_vs_flat,{gap:.5f},measured_divergence")
+
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "scaling.json"), "w") as f:
         json.dump(out, f, indent=1, default=float)
@@ -329,7 +399,9 @@ def _main() -> None:
     if len(sys.argv) >= 2 and sys.argv[1] == "--sharded-child":
         w, n_dev, rounds = (int(a) for a in sys.argv[2:5])
         mode = sys.argv[5] if len(sys.argv) > 5 else "dense"
-        print(json.dumps(_sharded_child(w, n_dev, rounds, mode)), flush=True)
+        pods = int(sys.argv[6]) if len(sys.argv) > 6 else 1
+        cross_k = int(sys.argv[7]) if len(sys.argv) > 7 else 1
+        print(json.dumps(_sharded_child(w, n_dev, rounds, mode, pods, cross_k)), flush=True)
         return
     for line in run(quick=True):
         print(line)

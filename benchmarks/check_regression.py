@@ -58,6 +58,12 @@ GUARDED = [
     ("scaling.sharded_w*.wall_ms_per_round", 0.20),
     ("scaling.sharded_w*.gossip_bytes_per_round", 0.20),
     ("scaling.dispatch_w*.wall_ms_per_round", 0.20),
+    # hierarchical (pod, workers) mesh: per-tier footprints are exact
+    # formulas (any drift is an accounting regression), wall clock gets
+    # the usual cross-machine headroom until rebaselined
+    ("scaling.pod2_w*.wall_ms_per_round", 0.20),
+    ("scaling.pod2_w*.ici_bytes_per_round", 0.20),
+    ("scaling.pod2_w*.dcn_bytes_per_round", 0.20),
 ]
 
 #: wall-clock metrics absorb cross-machine noise until rebaselined from

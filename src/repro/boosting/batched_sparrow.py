@@ -160,8 +160,14 @@ class BatchedSparrowWorker(SparrowWorkerBase):
         self, state: BatchedSparrowState, rows: jnp.ndarray
     ) -> StumpModel:
         """Gather just ``rows`` of the broadcast payload — the sharded
-        engine's gated gossip ships each device's top-k improved
-        candidate models instead of the full (W_local, ...) stack."""
+        engine's candidate-selecting tiers both use this hook: gated
+        intra-pod gossip ships each device's top-k improved candidate
+        models instead of the full (W_local, ...) stack, and the
+        pod-mesh engine's cross-pod (DCN) tier ships each device's
+        top-k *pending* candidates every ``cross_pod_every_k`` rounds.
+        The rows carry whatever the worker currently holds, so a
+        cross-pod flush always exports the FRESHEST model for a worker
+        whose certificate kept improving between flushes."""
         return jax.tree_util.tree_map(lambda a: a[rows], state.model)
 
     def needs_resample(self, state: BatchedSparrowState) -> jnp.ndarray:

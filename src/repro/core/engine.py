@@ -66,6 +66,22 @@ sharded engine must produce the *same final certificates* as this
 single-device engine (which PR 1 in turn pins against the event-driven
 fidelity-1 oracle), including fail-stop masks and laggard credit;
 ``tests/test_sharded_engine.py`` enforces it on 8 forced host devices.
+
+One rung further, a 2-D ``("pod", "workers")`` mesh makes the gossip
+hierarchical: per-round all_gathers stay inside a pod (ICI) while only
+each device's freshest top-k pending improvements cross the ``pod``
+axis (DCN) every :attr:`EngineConfig.cross_pod_every_k` rounds —
+bit-identical to the flat engine at ``k=1`` under uniform delay, a
+benchmark-measured approximation beyond.
+
+Sharding contract: everything in this module is written to be
+shardable over the worker axis — every per-worker quantity (including
+per-worker constants like feature-ownership masks) lives in the state
+pytree with a leading ``(W,)`` axis and shards with it; scalars carried
+in :class:`EngineState` (``round``, the counters on THIS engine) are
+replicated. On the single-device engine the distinction is vacuous;
+:mod:`repro.core.engine_sharded` states the full per-shard/replicated
+split its ``shard_map`` enforces.
 """
 
 from __future__ import annotations
@@ -80,6 +96,27 @@ import numpy as np
 
 from repro.core.protocol import accepts, improves
 from repro.core.result import SimResult, TrafficCounters
+
+
+def _env_int(name: str, default: int) -> int:
+    """Integer ``REPRO_*`` override: unset/empty/whitespace falls back
+    to the default; a malformed value raises naming the variable (the
+    bare ``int()`` error would not say where the bad string came from)."""
+    raw = os.environ.get(name, "").strip()
+    if not raw:
+        return default
+    try:
+        return int(raw)
+    except ValueError:
+        raise ValueError(f"env override {name} must be an integer, got {raw!r}") from None
+
+
+def _env_str(name: str, default: str) -> str:
+    """String ``REPRO_*`` override; unset/empty/whitespace = default.
+    Value validation stays with the consumer (TMSNEngine rejects unknown
+    gossip modes whether they came from the env or an explicit arg)."""
+    raw = os.environ.get(name, "").strip()
+    return raw if raw else default
 
 
 class BatchedTMSNWorker(Protocol):
@@ -127,10 +164,11 @@ class BatchedTMSNWorker(Protocol):
         Workers may additionally implement the optional
         ``export_payload_rows(state, rows) -> models`` hook: gather just
         ``rows`` (a (k,) int array of worker-axis indices) of the
-        payload. The sharded engine's gated gossip mode uses it to ship
-        only the top-k locally-improved candidate models instead of the
-        full stack; absent the hook it falls back to indexing
-        ``export_models``."""
+        payload. The sharded engine's candidate-selecting tiers use it
+        — gated gossip ships only the top-k locally-improved candidate
+        models instead of the full stack, and the pod-mesh cross-pod
+        tier ships the top-k pending candidates per flush; absent the
+        hook both fall back to indexing ``export_models``."""
         ...
 
     def adopt_batch(
@@ -169,7 +207,7 @@ class EngineConfig:
     #: recovered from the stacked per-round info). Env-overridable so
     #: CI can rerun the whole tier chunked: REPRO_ROUNDS_PER_DISPATCH.
     rounds_per_dispatch: int = dataclasses.field(
-        default_factory=lambda: int(os.environ.get("REPRO_ROUNDS_PER_DISPATCH", "8"))
+        default_factory=lambda: _env_int("REPRO_ROUNDS_PER_DISPATCH", 8)
     )
     #: cross-device gossip policy of the SHARDED engine (ignored on one
     #: device). "dense": all_gather every worker's model payload every
@@ -184,15 +222,36 @@ class EngineConfig:
     #: under heterogeneous delay matrices it is an explicit
     #: approximation. Env-overridable: REPRO_GOSSIP_MODE.
     gossip_mode: str = dataclasses.field(
-        default_factory=lambda: os.environ.get("REPRO_GOSSIP_MODE", "dense")
+        default_factory=lambda: _env_str("REPRO_GOSSIP_MODE", "dense")
     )
     #: per-device candidate count for gated gossip (clamped to the
     #: shard's local worker count)
     gossip_top_k: int = 1
-    #: optional ``jax.sharding.Mesh`` with a ``workers`` axis. ``None``
-    #: or a 1-device mesh keeps the single-device path; a multi-device
-    #: mesh makes :func:`make_engine` build the shard-mapped engine
-    #: (``n_workers`` must divide evenly over the axis).
+    #: cross-pod exchange cadence of the pod-mesh engine, in rounds
+    #: (ignored without a ``pod`` mesh axis). 1 = flush the cross-pod
+    #: tier every round, which under UNIFORM delay reproduces the flat
+    #: single-axis engine bit-identically (pinned in
+    #: tests/test_sharded_engine.py); k > 1 lets improvements accumulate
+    #: in the pending tier and ships only the freshest certificates
+    #: every k-th round over the DCN — an explicit approximation,
+    #: measured by bench_scaling.py. Env: REPRO_CROSS_POD_EVERY_K.
+    cross_pod_every_k: int = dataclasses.field(
+        default_factory=lambda: _env_int("REPRO_CROSS_POD_EVERY_K", 1)
+    )
+    #: per-device candidate count for each cross-pod flush (the PR 3
+    #: top-k gated payload path applied to the pod axis; clamped to the
+    #: shard's local worker count). Env: REPRO_CROSS_POD_TOP_K.
+    cross_pod_top_k: int = dataclasses.field(
+        default_factory=lambda: _env_int("REPRO_CROSS_POD_TOP_K", 1)
+    )
+    #: optional ``jax.sharding.Mesh``: a 1-D ``("workers",)`` mesh
+    #: shards the worker axis over one interconnect tier; a 2-D
+    #: ``("pod", "workers")`` mesh adds the hierarchical cross-pod tier
+    #: (``launch/mesh.py::make_worker_mesh(pods=...)`` builds both).
+    #: ``None`` or a 1-device mesh keeps the single-device path; a
+    #: multi-device mesh makes :func:`make_engine` build the
+    #: shard-mapped engine (``n_workers`` must divide evenly over the
+    #: total device count).
     mesh: Any = None
 
 
@@ -204,12 +263,18 @@ class EngineState(NamedTuple):
     credit: jnp.ndarray  # (W,) f32 compute credit (laggard model)
     clock: jnp.ndarray  # (W,) f32 per-worker simulated seconds
     inflight: jnp.ndarray  # (W, W, D) f32 — [dst, src, d] certs; +inf = empty
-    ring: Any  # model snapshots, leading (D, W)
+    ring: Any  # model snapshots, leading (D, W) — (n_pods*D, W) on a pod mesh
     round: jnp.ndarray  # () i32
     sent: jnp.ndarray  # () i32
     accepted: jnp.ndarray  # () i32
     discarded: jnp.ndarray  # () i32
     cost_total: jnp.ndarray  # () f32
+    #: (W,) bool — cross-pod tier: workers whose improvement is pending
+    #: the next pod-axis flush (constant False off the pod-mesh engine)
+    xpend: jnp.ndarray
+    #: () i32 — pushes that crossed a pod boundary (DCN tier); a
+    #: (n_dev,) per-shard partial on the sharded engines, like `sent`
+    sent_dcn: jnp.ndarray
 
 
 class RoundInfo(NamedTuple):
@@ -245,6 +310,14 @@ class TMSNEngine:
         if config.rounds_per_dispatch < 1:
             raise ValueError(
                 f"rounds_per_dispatch must be >= 1, got {config.rounds_per_dispatch}"
+            )
+        if config.cross_pod_every_k < 1:
+            raise ValueError(
+                f"cross_pod_every_k must be >= 1, got {config.cross_pod_every_k}"
+            )
+        if config.cross_pod_top_k < 1:
+            raise ValueError(
+                f"cross_pod_top_k must be >= 1, got {config.cross_pod_top_k}"
             )
 
         delay = np.asarray(config.delay_rounds)
@@ -357,6 +430,8 @@ class TMSNEngine:
             accepted=jnp.zeros((), jnp.int32),
             discarded=jnp.zeros((), jnp.int32),
             cost_total=jnp.zeros((), jnp.float32),
+            xpend=jnp.zeros((w,), bool),
+            sent_dcn=jnp.zeros((), jnp.int32),
         )
 
     def _round_step(self, state: EngineState) -> tuple[EngineState, RoundInfo]:
@@ -462,6 +537,8 @@ class TMSNEngine:
             accepted=state.accepted + n_taken,
             discarded=state.discarded + (n_arrivals - n_taken),
             cost_total=state.cost_total + jnp.sum(cost),
+            xpend=state.xpend,
+            sent_dcn=state.sent_dcn,
         )
         info = RoundInfo(
             certs=certs, changed=take | improved, clock=clock, alive=alive
@@ -529,11 +606,13 @@ class TMSNEngine:
             accepted=np.asarray(state.accepted),
             discarded=np.asarray(state.discarded),
             payload_bytes=self.worker.payload_bytes(),
+            sent_dcn=np.asarray(state.sent_dcn),
         )
         final_models = [
             jax.tree_util.tree_map(lambda a, i=i: a[i], models)
             for i in range(cfg.n_workers)
         ]
+        ici_bytes, dcn_bytes = self._gossip_split()
         return SimResult.from_traffic(
             traffic,
             history=history,
@@ -543,13 +622,17 @@ class TMSNEngine:
             cost_units_total=float(np.sum(np.asarray(state.cost_total))),
             events_processed=rounds * cfg.n_workers,
             rounds=rounds,
-            gossip_bytes_per_round=self._gossip_bytes_per_round(),
+            gossip_bytes_per_round=ici_bytes + dcn_bytes,
+            gossip_bytes_per_round_ici=ici_bytes,
+            gossip_bytes_per_round_dcn=dcn_bytes,
             gossip_mode=self._gossip_mode(),
         )
 
-    def _gossip_bytes_per_round(self) -> int:
-        """Cross-device exchange footprint per round; 0 on one device."""
-        return 0
+    def _gossip_split(self) -> tuple[int, int]:
+        """(ICI, DCN) cross-device exchange footprint per round; the DCN
+        leg is amortized over ``cross_pod_every_k``. (0, 0) on one
+        device."""
+        return 0, 0
 
     def _gossip_mode(self) -> str:
         """Mode label for SimResult; one device has no cross-device
@@ -583,7 +666,9 @@ def make_engine(worker: BatchedTMSNWorker, config: EngineConfig) -> TMSNEngine:
     ``mesh=None`` or a 1-device mesh falls back to the single-device
     :class:`TMSNEngine` (the sharded path would only add collective
     overhead); a multi-device mesh with a ``workers`` axis builds the
-    shard-mapped :class:`~repro.core.engine_sharded.ShardedTMSNEngine`.
+    shard-mapped :class:`~repro.core.engine_sharded.ShardedTMSNEngine` —
+    single-tier on a ``("workers",)`` mesh, hierarchical two-tier on a
+    ``("pod", "workers")`` mesh.
     """
     mesh = config.mesh
     if mesh is None or mesh.size == 1:

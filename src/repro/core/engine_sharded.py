@@ -42,10 +42,39 @@ What changes relative to the single-device engine:
     delay matrices generations mix in the arrival slot and gated mode
     is an explicit, *measured* approximation (``bench_scaling.py``
     reports both modes);
+  * **hierarchical pod mesh** (a 2-D ``("pod", "workers")`` mesh from
+    ``launch/mesh.py::make_worker_mesh(pods=...)``): the interconnect
+    itself becomes two-tier. Intra-pod gossip stays the per-round
+    all_gather — but over the ``workers`` axis of ONE pod (ICI-class
+    links). Cross-pod exchange is a SECOND in-flight tier: improvements
+    accumulate in a per-worker pending mask (``EngineState.xpend``) and
+    every ``EngineConfig.cross_pod_every_k`` rounds each device ships
+    its top-``cross_pod_top_k`` pending candidates — freshest
+    certificate, global worker id, model payload: the same top-k gated
+    payload path — over the ``pod`` axis (DCN-class links). Receivers
+    push the certificates into the in-flight buffer for cross-pod
+    destinations only (same-pod destinations already heard tier 1) and
+    scatter the payloads into their pod's ring replica. At
+    ``cross_pod_every_k=1`` under uniform delay the pod engine is
+    bit-identical to the flat all-device engine — the suppressed
+    runner-up argument above applies per device, and a pending leftover
+    that ships late is always dominated at every destination by a
+    same-device candidate that shipped earlier (monotonicity), so it
+    can neither be accepted nor displace an acceptable delivery
+    (``tests/test_sharded_engine.py::TestPodMesh`` pins certs, history,
+    and adoptions, dense and gated, incl. fail-stop and laggards). At
+    k > 1 staleness is an explicit approximation — ``bench_scaling.py``
+    reports the per-k certificate divergence and the ICI/DCN traffic
+    split, never assumes them;
   * the ``(D, W)`` model-snapshot ring is *replicated* per shard but
     fed only by the gathered payloads (scattered by global worker id
     in gated mode), so any destination can look up any source's
-    delayed snapshot without a second exchange;
+    delayed snapshot without a second exchange. On a pod mesh the
+    intra-pod gather differs between pods, so the ring is replicated
+    only WITHIN a pod: the leading dim grows to ``n_pods * D`` and
+    shards over the ``pod`` axis — one private ``(D, W)`` replica per
+    pod, written by that pod's tier-1 gather plus the (globally
+    identical) tier-2 flushes;
   * dispatch is chunked (``EngineConfig.rounds_per_dispatch``): the
     whole ``lax.scan`` over K rounds runs inside ONE ``shard_map``
     region, so per-chunk Python dispatch + host sync amortize over K
@@ -55,7 +84,18 @@ What changes relative to the single-device engine:
   * traffic counters are per-shard partials of shape ``(n_dev,)``
     (summing inside the step would cost a ``psum`` per round);
     :meth:`~repro.core.result.TrafficCounters.from_shards` reduces
-    them once at the end of the run.
+    them once at the end of the run — including the ICI/DCN split
+    (``sent_dcn`` counts pushes that crossed a pod boundary).
+
+Sharding contract (what lives per-shard vs replicated): per-shard —
+the worker state pytree, certificates, alive/credit/clock vectors, the
+destination-sharded in-flight buffer, the ``xpend`` pending mask, and
+all traffic-counter partials (every ``EngineState`` field with leading
+worker axis, partitioned over the whole mesh). Replicated — the round
+counter, the target-crossing ``done`` flag (derived from a psum), and
+on a 1-D mesh the snapshot ring; on a pod mesh the ring is replicated
+per pod and sharded over the ``pod`` axis. Closed-over read-only data
+(the disk dataset) is replicated to every device.
 
 Equivalence contract: the per-worker math is elementwise over the
 worker axis and delivery argmins run over the full source axis in both
@@ -106,17 +146,28 @@ class _ShardConsts(NamedTuple):
 
 
 class ShardedTMSNEngine(TMSNEngine):
-    """Round-based TMSN run sharded over a ``workers`` mesh axis."""
+    """Round-based TMSN run sharded over a ``workers`` mesh axis, or
+    hierarchically over a two-tier ``(pod, workers)`` mesh."""
 
     def __init__(self, worker: BatchedTMSNWorker, config: EngineConfig) -> None:
         mesh = config.mesh
         if mesh is None:
             raise ValueError("ShardedTMSNEngine needs EngineConfig.mesh")
-        if tuple(mesh.axis_names) != ("workers",):
+        names = tuple(mesh.axis_names)
+        if names == ("workers",):
+            self._n_pods = 1
+            self._wpp = mesh.shape["workers"]  # devices on the workers axis
+        elif names == ("pod", "workers"):
+            self._n_pods = mesh.shape["pod"]
+            self._wpp = mesh.shape["workers"]
+        else:
             raise ValueError(
-                f"engine mesh must have exactly the 'workers' axis, got {mesh.axis_names}"
+                "engine mesh must have axes ('workers',) or ('pod', 'workers'), "
+                f"got {names}"
             )
-        self._n_dev = mesh.shape["workers"]
+        #: worker-axis partition spec: over both mesh axes on a pod mesh
+        self._waxes = "workers" if self._n_pods == 1 else ("pod", "workers")
+        self._n_dev = self._n_pods * self._wpp
         if config.n_workers % self._n_dev:
             raise ValueError(
                 f"n_workers={config.n_workers} must divide over {self._n_dev} devices"
@@ -130,37 +181,45 @@ class ShardedTMSNEngine(TMSNEngine):
         one ``shard_map`` region (collectives and the cross-shard
         target-crossing psum stay inside the compiled program)."""
         mesh = self.config.mesh
+        wx = self._waxes
         state_specs = EngineState(
-            worker=P("workers"),
-            certs=P("workers"),
-            alive=P("workers"),
-            credit=P("workers"),
-            clock=P("workers"),
-            inflight=P("workers"),
-            ring=P(),  # replicated; every shard applies the same gathered update
+            worker=P(wx),
+            certs=P(wx),
+            alive=P(wx),
+            credit=P(wx),
+            clock=P(wx),
+            inflight=P(wx),
+            # single-tier: replicated (fed by the all-device gather).
+            # pod mesh: the intra-pod gather differs between pods, so
+            # each pod keeps its OWN ring replica — leading (n_pods*D)
+            # dim sharded over the pod axis, (D, W, ...) per pod.
+            ring=P() if self._n_pods == 1 else P("pod"),
             round=P(),
-            sent=P("workers"),
-            accepted=P("workers"),
-            discarded=P("workers"),
-            cost_total=P("workers"),
+            sent=P(wx),
+            accepted=P(wx),
+            discarded=P(wx),
+            cost_total=P(wx),
+            xpend=P(wx),
+            sent_dcn=P(wx),
         )
         # stacked over the chunk: leading scan axis, worker axis second
         infos_specs = RoundInfo(
-            certs=P(None, "workers"),
-            changed=P(None, "workers"),
-            clock=P(None, "workers"),
-            alive=P(None, "workers"),
+            certs=P(None, wx),
+            changed=P(None, wx),
+            clock=P(None, wx),
+            alive=P(None, wx),
         )
         consts_specs = _ShardConsts(
-            speed=P("workers"),
-            speed_norm=P("workers"),
-            fail_round=P("workers"),
-            delay_t=P("workers"),
+            speed=P(wx),
+            speed_norm=P(wx),
+            fail_round=P(wx),
+            delay_t=P(wx),
         )
 
         def _any_shard(x):
             # scalar "any worker on any shard" — replicated across shards
-            return jax.lax.psum(jnp.any(x).astype(jnp.int32), "workers") > 0
+            axes = ("workers",) if self._n_pods == 1 else ("pod", "workers")
+            return jax.lax.psum(jnp.any(x).astype(jnp.int32), axes) > 0
 
         def chunk_local(state: EngineState, consts: _ShardConsts):
             body = self._chunk_body(
@@ -192,30 +251,87 @@ class ShardedTMSNEngine(TMSNEngine):
     def _init_state(self) -> EngineState:
         state = super()._init_state()
         zi = jnp.zeros((self._n_dev,), jnp.int32)
-        return state._replace(
+        state = state._replace(
             sent=zi,
             accepted=zi,
             discarded=zi,
             cost_total=jnp.zeros((self._n_dev,), jnp.float32),
+            sent_dcn=zi,
         )
+        if self._n_pods > 1:
+            # one private snapshot ring per pod (the intra-pod gather
+            # feeds each pod differently): leading dim n_pods * D,
+            # sharded over the pod axis to (D, W, ...) per pod. Initial
+            # models are identical everywhere, so tiling is consistent.
+            state = state._replace(
+                ring=jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (self._n_pods,) + a.shape
+                    ).reshape((-1,) + a.shape[1:]),
+                    state.ring,
+                )
+            )
+        return state
 
-    def _gossip_bytes_per_round(self) -> int:
+    def _gossip_split(self) -> tuple[int, int]:
         p = self.worker.payload_bytes()
         w = self.config.n_workers
+        w_tier = w // self._n_pods  # workers gathered by the intra tier
         if self.config.gossip_mode == "gated":
             # dense control plane (f32 cert + bool broadcast flag per
-            # worker) + k candidate payloads per device, each carrying
-            # an int32 global worker id
+            # tier worker) + k candidate payloads per device, each
+            # carrying an int32 global worker id
             k = min(int(self.config.gossip_top_k), self._w_local)
-            return w * (4 + 1) + self._n_dev * k * (p + 4)
-        # dense: model payload + f32 certificate + bool fired flag from
-        # every worker, landing on every shard
-        return w * (p + 4 + 1)
+            ici = w_tier * (4 + 1) + self._wpp * k * (p + 4)
+        else:
+            # dense: model payload + f32 certificate + bool fired flag
+            # from every tier worker, landing on every shard
+            ici = w_tier * (p + 4 + 1)
+        if self._n_pods == 1:
+            return ici, 0
+        # cross-pod tier: top-k pending candidates per device (f32 cert
+        # + i32 global id + payload), gathered over ALL devices every
+        # cross_pod_every_k rounds — charged to the DCN class and
+        # amortized per round
+        kx = min(int(self.config.cross_pod_top_k), self._w_local)
+        dcn = self._n_dev * kx * (p + 4 + 4)
+        return ici, dcn // int(self.config.cross_pod_every_k)
 
     def _gossip_mode(self) -> str:
         return self.config.gossip_mode
 
     # ------------------------------------------------------------------
+    def _dev_index(self):
+        """Flat device index inside the shard-mapped step, matching the
+        1-D device order (``pod`` is the slow axis of the 2-D mesh)."""
+        if self._n_pods == 1:
+            return jax.lax.axis_index("workers")
+        return jax.lax.axis_index("pod") * self._wpp + jax.lax.axis_index("workers")
+
+    def _top_k_candidates(self, mask: jnp.ndarray, certs: jnp.ndarray, k: int):
+        """Select up to ``k`` local rows from ``mask`` by certificate.
+
+        Stable sort so ties break toward the lowest worker id, matching
+        the delivery argmin (this is what keeps the gated/cross-pod
+        paths equal to dense under uniform delay). Returns
+        ``(rows, valid)``: ``(k,)`` local row indices and a ``(k,)``
+        validity mask (a row is valid only where ``mask`` was set).
+        """
+        score = jnp.where(mask, certs, jnp.inf)
+        rows = jnp.argsort(score, stable=True)[:k]
+        return rows, jnp.isfinite(score[rows])
+
+    def _export_rows(self, wstate, rows: jnp.ndarray):
+        """Candidate payloads for ``rows`` via the worker's optional
+        ``export_payload_rows`` hook (falls back to indexing the full
+        exported stack)."""
+        export_rows = getattr(self.worker, "export_payload_rows", None)
+        if export_rows is not None:
+            return export_rows(wstate, rows)
+        return jax.tree_util.tree_map(
+            lambda a: a[rows], self.worker.export_models(wstate)
+        )
+
     def _sharded_round_step(
         self, state: EngineState, consts: _ShardConsts
     ) -> tuple[EngineState, RoundInfo]:
@@ -223,7 +339,7 @@ class ShardedTMSNEngine(TMSNEngine):
         w, depth, wl = cfg.n_workers, self._depth, self._w_local
         r = state.round
         row_idx = jnp.arange(wl)
-        local_ids = jax.lax.axis_index("workers") * wl + row_idx  # global dst ids
+        local_ids = self._dev_index() * wl + row_idx  # global dst ids
         alive = state.alive & (r < consts.fail_round)
 
         # last round's post-scan certificates, carried in the state (no
@@ -282,28 +398,21 @@ class ShardedTMSNEngine(TMSNEngine):
         cost = adopt_cost + resample_cost + scan_cost
         clock = state.clock + cost / jnp.maximum(consts.speed, 1e-12)
 
-        # --- 4+5. gossip: certificates + broadcast flags always gather
-        # densely (the cheap control plane); model payloads gather for
+        # --- 4+5. gossip, tier 1 (intra-pod / single-axis): certificates
+        # + broadcast flags always gather densely over the ``workers``
+        # axis (the cheap control plane); model payloads gather for
         # every worker ("dense") or only for each device's top-k
-        # locally-improved candidates ("gated") -----------------------------
+        # locally-improved candidates ("gated"). On a 1-D mesh the
+        # ``workers`` axis spans every device and this is the ONLY tier;
+        # on a pod mesh it spans one pod, and the gathered (W_pod,)
+        # control plane is scattered into the (W,)-wide arrays at the
+        # pod's contiguous global-id block ----------------------------------
         improved = fired & improves(certs_pre, certs, 0.0) & scan_mask
+        w_tier = w // self._n_pods  # workers visible to the intra tier
         if cfg.gossip_mode == "gated":
             k = min(int(cfg.gossip_top_k), wl)
-            # top-k local improvers by certificate; stable sort so ties
-            # break toward the lowest worker id, matching the delivery
-            # argmin (this keeps gated == dense under uniform delay)
-            score = jnp.where(improved, certs, jnp.inf)
-            cand_rows = jnp.argsort(score, stable=True)[:k]  # (k,) local rows
-            cand_valid = jnp.isfinite(score[cand_rows])  # actually improved
+            cand_rows, cand_valid = self._top_k_candidates(improved, certs, k)
             bcast = jnp.zeros((wl,), bool).at[cand_rows].set(cand_valid)
-            export_rows = getattr(self.worker, "export_payload_rows", None)
-            cand_models = (
-                export_rows(wstate, cand_rows)
-                if export_rows is not None
-                else jax.tree_util.tree_map(
-                    lambda a: a[cand_rows], self.worker.export_models(wstate)
-                )
-            )
             # ONE collective: tiled gathers are per-leaf, so the (wl,)
             # control plane and the (k,) payload leg ride together —
             # at gated payload sizes the per-collective launch latency
@@ -315,13 +424,13 @@ class ShardedTMSNEngine(TMSNEngine):
                     # un-improved candidate slots point out of bounds so
                     # the ring scatter drops them
                     "ids": jnp.where(cand_valid, local_ids[cand_rows], w),
-                    "models": cand_models,
+                    "models": self._export_rows(wstate, cand_rows),
                 },
                 "workers",
                 axis=0,
                 tiled=True,
-            )  # certs/bcast: (W,); ids/models: (n_dev * k, ...)
-            certs_all, bcast_all = gathered["certs"], gathered["bcast"]
+            )  # certs/bcast: (w_tier,); ids/models: (wpp * k, ...)
+            tier_certs, tier_bcast = gathered["certs"], gathered["bcast"]
             ring = jax.tree_util.tree_map(
                 lambda buf, m: buf.at[r % depth, gathered["ids"]].set(m, mode="drop"),
                 state.ring,
@@ -338,23 +447,46 @@ class ShardedTMSNEngine(TMSNEngine):
                 axis=0,
                 tiled=True,
             )
-            certs_all, bcast_all = gathered["certs"], gathered["improved"]  # (W,)
+            tier_certs, tier_bcast = gathered["certs"], gathered["improved"]
             # ring writes gated to broadcasters (only their entries are
             # ever read back), mirroring the single-device engine
-            ring = jax.tree_util.tree_map(
-                lambda buf, m: buf.at[r % depth].set(
-                    jnp.where(
-                        bcast_all.reshape((-1,) + (1,) * (m.ndim - 1)),
-                        m,
-                        buf[r % depth],
-                    )
-                ),
-                state.ring,
-                gathered["models"],
-            )
+            if self._n_pods == 1:
+                ring = jax.tree_util.tree_map(
+                    lambda buf, m: buf.at[r % depth].set(
+                        jnp.where(
+                            tier_bcast.reshape((-1,) + (1,) * (m.ndim - 1)),
+                            m,
+                            buf[r % depth],
+                        )
+                    ),
+                    state.ring,
+                    gathered["models"],
+                )
+
+        if self._n_pods == 1:
+            certs_all, bcast_all = tier_certs, tier_bcast  # (W,)
+        else:
+            # scatter the pod-local control plane into global width;
+            # pod p owns the contiguous global-id block
+            # [p * W_pod, (p + 1) * W_pod)
+            pod_idx = jax.lax.axis_index("pod")
+            pod_gids = pod_idx * w_tier + jnp.arange(w_tier)
+            certs_all = jnp.full((w,), jnp.inf, jnp.float32).at[pod_gids].set(tier_certs)
+            bcast_all = jnp.zeros((w,), bool).at[pod_gids].set(tier_bcast)
+            if cfg.gossip_mode != "gated":
+                # dense intra-pod ring writes, scattered by global id
+                # into this pod's private ring replica (silent workers
+                # point out of bounds and drop)
+                ids = jnp.where(tier_bcast, pod_gids, w)
+                ring = jax.tree_util.tree_map(
+                    lambda buf, m: buf.at[r % depth, ids].set(m, mode="drop"),
+                    state.ring,
+                    gathered["models"],
+                )
 
         d_idx = jnp.arange(depth)[None, None, :]
-        # push_mask[local dst, global src, d]
+        # push_mask[local dst, global src, d]; on a pod mesh bcast_all
+        # is zero outside this pod, so tier-1 pushes stay intra-pod
         push_mask = (
             bcast_all[None, :, None]
             & alive[:, None, None]
@@ -363,6 +495,78 @@ class ShardedTMSNEngine(TMSNEngine):
         )
         inflight = jnp.where(push_mask, certs_all[None, :, None], inflight)
         n_pushed = jnp.sum(push_mask, dtype=jnp.int32)
+
+        # --- gossip, tier 2 (cross-pod, DCN): improvements accumulate
+        # in the pending mask and the freshest certificates flush over
+        # the ``pod`` axis every cross_pod_every_k rounds — the paper's
+        # "tell me something new" applied to the interconnect hierarchy.
+        # Each device ships its top cross_pod_top_k pending candidates
+        # (the PR 3 gated payload path); receivers scatter the payloads
+        # into their pod's ring replica and push the certificates into
+        # the in-flight buffer for cross-pod destinations only (same-pod
+        # destinations already got them from tier 1) ------------------------
+        xpend = state.xpend
+        n_pushed_x = jnp.zeros((), jnp.int32)
+        if self._n_pods > 1:
+            xpend = xpend | improved
+            kx = min(int(cfg.cross_pod_top_k), wl)
+            src_pod = jnp.arange(w) // w_tier  # (W,) pod of each global id
+
+            def _flush(args):
+                xpend, inflight, ring = args
+                rows, valid = self._top_k_candidates(xpend, certs, kx)
+                gx = jax.lax.all_gather(
+                    {
+                        "certs": certs[rows],
+                        "ids": jnp.where(valid, local_ids[rows], w),
+                        "models": self._export_rows(wstate, rows),
+                    },
+                    ("pod", "workers"),
+                    axis=0,
+                    tiled=True,
+                )  # (n_dev * kx, ...), flat-device order (pod-major)
+                ring = jax.tree_util.tree_map(
+                    lambda buf, m: buf.at[r % depth, gx["ids"]].set(m, mode="drop"),
+                    ring,
+                    gx["models"],
+                )
+                xcerts = (
+                    jnp.full((w,), jnp.inf, jnp.float32)
+                    .at[gx["ids"]]
+                    .set(gx["certs"], mode="drop")
+                )
+                xbcast = (
+                    jnp.zeros((w,), bool)
+                    .at[gx["ids"]]
+                    .set(jnp.ones_like(gx["ids"], bool), mode="drop")
+                )
+                xpush = (
+                    xbcast[None, :, None]
+                    & alive[:, None, None]
+                    # only cross-pod destinations (self-exclusion implied)
+                    & (src_pod != pod_idx)[None, :, None]
+                    & (d_idx == (consts.delay_t[:, :, None] - 1))
+                )
+                inflight = jnp.where(xpush, xcerts[None, :, None], inflight)
+                flushed = jnp.zeros((wl,), bool).at[rows].set(valid)
+                return (
+                    xpend & ~flushed,
+                    inflight,
+                    ring,
+                    jnp.sum(xpush, dtype=jnp.int32),
+                )
+
+            if int(cfg.cross_pod_every_k) == 1:
+                xpend, inflight, ring, n_pushed_x = _flush((xpend, inflight, ring))
+            else:
+                # `r` is replicated, so every device takes the same
+                # branch and the pod-axis collective stays uniform
+                xpend, inflight, ring, n_pushed_x = jax.lax.cond(
+                    (r % int(cfg.cross_pod_every_k)) == 0,
+                    _flush,
+                    lambda args: (args[0], args[1], args[2], jnp.zeros((), jnp.int32)),
+                    (xpend, inflight, ring),
+                )
 
         new_state = EngineState(
             worker=wstate,
@@ -374,10 +578,12 @@ class ShardedTMSNEngine(TMSNEngine):
             ring=ring,
             round=r + 1,
             # (1,)-shaped per-shard partials; (n_dev,) globally
-            sent=state.sent + n_pushed,
+            sent=state.sent + n_pushed + n_pushed_x,
             accepted=state.accepted + n_taken,
             discarded=state.discarded + (n_arrivals - n_taken),
             cost_total=state.cost_total + jnp.sum(cost),
+            xpend=xpend,
+            sent_dcn=state.sent_dcn + n_pushed_x,
         )
         info = RoundInfo(
             certs=certs, changed=take | improved, clock=clock, alive=alive

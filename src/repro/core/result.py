@@ -6,6 +6,16 @@ the vectorized round-based :class:`~repro.core.engine.TMSNEngine`
 (fidelity-2: one segment per round, latencies quantized to rounds,
 everything batched over the worker axis) produce the same result type,
 so benchmark and analysis code is substrate-agnostic.
+
+Sharding contract: everything in this module lives on the HOST after a
+run — nothing here is ever traced or sharded. The one shard-aware seam
+is :meth:`TrafficCounters.from_shards`: the sharded engines accumulate
+``sent`` / ``accepted`` / ``discarded`` / ``sent_dcn`` as per-shard
+``(n_devices,)`` partials (a per-round ``psum`` inside the step would
+cost a collective per round) and this classmethod is the single place
+the cross-shard reduction to global scalars happens. Per-round gossip
+footprints in :class:`SimResult` are replicated config-derived figures,
+identical on every shard by construction.
 """
 
 from __future__ import annotations
@@ -32,21 +42,50 @@ class TrafficCounters:
     accepted: int = 0
     discarded: int = 0
     bytes_broadcast: int = 0
+    #: interconnect-tier split of ``sent`` (pod-mesh engine): pushes
+    #: that crossed a pod boundary (DCN); the intra-pod (ICI) half and
+    #: the byte figures are derived properties below, so the split can
+    #: never drift from the totals. Single-tier substrates report 0.
+    sent_dcn: int = 0
+    #: payload size one push carries (kept so the derived byte split
+    #: stays consistent with ``bytes_broadcast``)
+    payload_bytes: int = 0
+
+    @property
+    def sent_ici(self) -> int:
+        return self.sent - self.sent_dcn
+
+    @property
+    def bytes_dcn(self) -> int:
+        return self.sent_dcn * self.payload_bytes
 
     @classmethod
-    def from_shards(cls, sent: Any, accepted: Any, discarded: Any, payload_bytes: int) -> "TrafficCounters":
+    def from_shards(
+        cls,
+        sent: Any,
+        accepted: Any,
+        discarded: Any,
+        payload_bytes: int,
+        sent_dcn: Any = 0,
+    ) -> "TrafficCounters":
         """Reduce per-shard partial counters into global totals.
 
         The sharded engine keeps one partial counter per device (summing
         inside the shard-mapped step would cost a ``psum`` per round);
         the single-device engine passes () scalars. ``np.sum`` handles
-        both shapes, so this is the one place the reduction lives.
+        both shapes, so this is the one place the reduction lives —
+        including the per-tier ICI/DCN split of the pod-mesh engine
+        (``sent`` is the all-tier total; ``sent_dcn`` the pod-crossing
+        part; ICI is the difference).
         """
+        total = int(np.sum(sent))
         return cls(
-            sent=int(np.sum(sent)),
+            sent=total,
             accepted=int(np.sum(accepted)),
             discarded=int(np.sum(discarded)),
-            bytes_broadcast=int(np.sum(sent)) * payload_bytes,
+            bytes_broadcast=total * payload_bytes,
+            sent_dcn=int(np.sum(sent_dcn)),
+            payload_bytes=payload_bytes,
         )
 
 
@@ -71,12 +110,23 @@ class SimResult:
     #: rounds executed (round-based engine only; 0 for the event sim)
     rounds: int = 0
     #: cross-device gossip exchange footprint per round in bytes —
-    #: 0 for the event sim and the single-device engine. For the
-    #: sharded engine the figure is per ``gossip_mode``:
+    #: 0 for the event sim and the single-device engine; the sum of the
+    #: ICI and (amortized) DCN tiers below for the sharded engines. For
+    #: the single-tier engine the figure is per ``gossip_mode``:
     #:   dense: W · (payload + 4 + 1)            (every model, every round)
     #:   gated: W · 5 + n_dev · k · (payload + 4) (certs/flags densely,
     #:          payloads only for top-k improved candidates per device)
     gossip_bytes_per_round: int = 0
+    #: per-tier split on the pod-mesh engine: the intra-pod all_gather
+    #: footprint (every round, over the ``workers`` axis — ICI class
+    #: links) vs the cross-pod candidate exchange (every
+    #: ``cross_pod_every_k`` rounds over the ``pod`` axis — DCN class),
+    #: the DCN figure amortized per round. Single-tier substrates
+    #: report everything as ICI and 0 DCN.
+    gossip_bytes_per_round_ici: int = 0
+    gossip_bytes_per_round_dcn: int = 0
+    #: pushes that crossed a pod boundary (0 off the pod-mesh engine)
+    messages_sent_dcn: int = 0
     #: which gossip policy produced ``gossip_bytes_per_round``
     #: ("dense" | "gated"; single-device substrates report "dense")
     gossip_mode: str = "dense"
@@ -102,5 +152,6 @@ class SimResult:
             messages_accepted=traffic.accepted,
             messages_discarded=traffic.discarded,
             bytes_broadcast=traffic.bytes_broadcast,
+            messages_sent_dcn=traffic.sent_dcn,
             **kw,
         )

@@ -24,14 +24,24 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
-def make_worker_mesh(num_devices: int | None = None):
-    """1-D ``workers`` mesh for the device-sharded TMSN engine.
+def make_worker_mesh(num_devices: int | None = None, pods: int = 1):
+    """Worker mesh for the device-sharded TMSN engine.
+
+    ``pods=1`` (default) builds the 1-D ``("workers",)`` mesh: one
+    interconnect tier, gossip is a single all_gather over every device.
+    ``pods > 1`` builds the hierarchical 2-D ``("pod", "workers")``
+    mesh — ``pods`` groups of ``num_devices / pods`` devices each, with
+    ``pod`` as the slow (device-order-major) axis so the flat device
+    order matches the 1-D mesh. The engine then keeps per-round gossip
+    on the ``workers`` (ICI) axis and exchanges only the freshest
+    pending certificates over the ``pod`` (DCN) axis every
+    ``EngineConfig.cross_pod_every_k`` rounds.
 
     ``num_devices=None`` takes every visible device (on CI that is the
     8 forced host devices from ``--xla_force_host_platform_device_count``;
     on a TPU pod slice, the real chips). The engine shards the stacked
-    ``(W, ...)`` worker state over this axis, so ``n_workers`` must be
-    a multiple of the mesh size.
+    ``(W, ...)`` worker state over the whole mesh, so ``n_workers`` must
+    be a multiple of the total device count.
     """
     if num_devices is None:
         num_devices = len(jax.devices())
@@ -39,7 +49,13 @@ def make_worker_mesh(num_devices: int | None = None):
         raise ValueError(
             f"num_devices={num_devices} not in [1, {len(jax.devices())}] visible devices"
         )
-    return jax.make_mesh((num_devices,), ("workers",))
+    if pods < 1:
+        raise ValueError(f"pods={pods} must be >= 1")
+    if pods == 1:
+        return jax.make_mesh((num_devices,), ("workers",))
+    if num_devices % pods:
+        raise ValueError(f"num_devices={num_devices} must divide into {pods} pods")
+    return jax.make_mesh((pods, num_devices // pods), ("pod", "workers"))
 
 
 def data_axes(mesh) -> tuple[str, ...]:
@@ -51,6 +67,10 @@ def data_axes(mesh) -> tuple[str, ...]:
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
 HBM_BW = 819e9  # B/s
 ICI_BW = 50e9  # B/s per link
+# data-center network between pods — order 100 Gbit/s per host, an
+# order of magnitude under ICI; the gap is why the pod-mesh engine
+# moves cross-pod payloads only every cross_pod_every_k rounds
+DCN_BW = 12.5e9  # B/s
 
 
 def ici_round_seconds(gossip_bytes_per_round: int, bandwidth: float = ICI_BW) -> float:
@@ -61,3 +81,10 @@ def ici_round_seconds(gossip_bytes_per_round: int, bandwidth: float = ICI_BW) ->
     not a measurement — the ROADMAP's real-interconnect item is about
     replacing this with profiler traces on hardware."""
     return float(gossip_bytes_per_round) / float(bandwidth)
+
+
+def dcn_round_seconds(dcn_bytes_per_round: int, bandwidth: float = DCN_BW) -> float:
+    """Lower-bound wire seconds per round on the cross-pod DCN tier,
+    from the pod-mesh engine's amortized ``gossip_bytes_per_round_dcn``.
+    Same derived-not-measured formula as the ICI tier, at DCN bandwidth."""
+    return ici_round_seconds(dcn_bytes_per_round, bandwidth)

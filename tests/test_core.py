@@ -163,3 +163,31 @@ class TestProtocol:
             if accepts(local, incoming, 0.05):
                 assert incoming < local
                 local = incoming
+
+
+class TestTrafficCounters:
+    """The shared counter reduction incl. the ICI/DCN tier split (the
+    pod-mesh engine's per-shard partials land here; the derived halves
+    must stay consistent with the totals by construction)."""
+
+    def test_from_shards_reduces_partials(self):
+        from repro.core.result import TrafficCounters
+
+        t = TrafficCounters.from_shards(
+            sent=np.array([3, 4]), accepted=np.array([1, 1]),
+            discarded=np.array([0, 2]), payload_bytes=8,
+            sent_dcn=np.array([2, 1]),
+        )
+        assert (t.sent, t.accepted, t.discarded) == (7, 2, 2)
+        assert t.bytes_broadcast == 7 * 8
+        assert (t.sent_dcn, t.sent_ici) == (3, 4)
+        assert t.bytes_dcn == 3 * 8
+
+    def test_single_tier_scalars_report_zero_dcn(self):
+        from repro.core.result import TrafficCounters
+
+        t = TrafficCounters.from_shards(
+            sent=10, accepted=4, discarded=6, payload_bytes=16
+        )
+        assert t.sent_dcn == 0 and t.bytes_dcn == 0
+        assert t.sent_ici == t.sent == 10

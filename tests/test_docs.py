@@ -1,0 +1,172 @@
+"""Docs are part of tier-1: a broken link, a drifted config reference,
+or a quickstart command that no longer works fails the fast tier on
+every push (the CI `docs` job additionally runs the link checker
+standalone, without an install step).
+
+Three guards:
+
+  * every internal markdown link/anchor in README.md, docs/, ROADMAP.md
+    and CHANGES.md resolves (tools/check_md_links.py);
+  * docs/config.md cannot drift from EngineConfig: every dataclass
+    field and every REPRO_* env override must be documented, and every
+    documented override must still exist in the code;
+  * the README quickstart commands reference real files, and its tier-1
+    verify line actually collects the suite (smoke-run with
+    --collect-only: cheap, and zero collection errors is a standing
+    ROADMAP requirement).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_md_links  # noqa: E402
+
+from repro.core.engine import EngineConfig  # noqa: E402
+
+DOC_SURFACE = ["README.md", "docs", "ROADMAP.md", "CHANGES.md"]
+
+
+def _fenced_blocks(md: str) -> list[str]:
+    """Contents of ``` fenced code blocks, any language tag."""
+    return re.findall(r"```[a-z]*\n(.*?)```", md, flags=re.DOTALL)
+
+
+# ---------------------------------------------------------------------------
+# link integrity
+# ---------------------------------------------------------------------------
+
+
+class TestLinks:
+    def test_all_internal_links_resolve(self):
+        files = check_md_links.collect_md(DOC_SURFACE, REPO)
+        assert files, "doc surface is empty — README/docs went missing?"
+        errors = []
+        for md in files:
+            errs, _, _ = check_md_links.check_file(md, REPO)
+            errors.extend(errs)
+        assert not errors, "broken markdown links:\n" + "\n".join(errors)
+
+    def test_readme_and_docs_exist(self):
+        for name in ("README.md", "docs/architecture.md", "docs/config.md"):
+            assert (REPO / name).is_file(), f"{name} missing"
+
+
+# ---------------------------------------------------------------------------
+# docs/config.md <-> EngineConfig drift
+# ---------------------------------------------------------------------------
+
+
+class TestConfigReference:
+    def _doc(self) -> str:
+        return (REPO / "docs" / "config.md").read_text()
+
+    def test_every_engine_config_field_documented(self):
+        doc = self._doc()
+        missing = [
+            f.name
+            for f in dataclasses.fields(EngineConfig)
+            if f"`{f.name}`" not in doc
+        ]
+        assert not missing, (
+            f"EngineConfig fields undocumented in docs/config.md: {missing}"
+        )
+
+    def _env_vars_in_code(self) -> set[str]:
+        src = (REPO / "src" / "repro" / "core" / "engine.py").read_text()
+        # only variables the code actually READS (not prose mentions)
+        return set(re.findall(r"_env_(?:int|str)\(\"(REPRO_[A-Z_]+)\"", src))
+
+    def test_every_env_override_documented(self):
+        doc = self._doc()
+        in_code = self._env_vars_in_code()
+        assert in_code, "no REPRO_* overrides found in engine.py — parser moved?"
+        missing = sorted(v for v in in_code if f"`{v}`" not in doc)
+        assert not missing, f"env overrides undocumented in docs/config.md: {missing}"
+
+    def test_no_phantom_env_overrides_documented(self):
+        doc = self._doc()
+        documented = set(re.findall(r"`(REPRO_[A-Z_]+)`", doc))
+        phantom = sorted(documented - self._env_vars_in_code())
+        assert not phantom, (
+            f"docs/config.md documents env overrides the code no longer reads: {phantom}"
+        )
+
+    def test_ci_matrix_legs_match_workflow(self):
+        """The legs table in docs/config.md names each matrix entry of
+        the fast-multidevice job."""
+        doc = self._doc()
+        wf = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+        for leg in re.findall(r"- name: ([\w-]+)\n\s+gossip_mode", wf):
+            assert f"`{leg}`" in doc, f"CI matrix leg {leg!r} missing from docs/config.md"
+
+
+# ---------------------------------------------------------------------------
+# README quickstart
+# ---------------------------------------------------------------------------
+
+
+class TestQuickstart:
+    def _readme(self) -> str:
+        return (REPO / "README.md").read_text()
+
+    def _commands(self) -> list[str]:
+        cmds = []
+        for block in _fenced_blocks(self._readme()):
+            for line in block.splitlines():
+                line = line.strip()
+                if line and not line.startswith("#"):
+                    cmds.append(line)
+        return cmds
+
+    def test_referenced_paths_exist(self):
+        """Every path-like token in a README code block must exist —
+        renaming an example without touching the README fails here."""
+        missing = []
+        for cmd in self._commands():
+            for tok in cmd.split():
+                if re.fullmatch(r"(examples|tests|benchmarks|docs|tools|src)/[\w./-]+", tok):
+                    if not (REPO / tok).exists():
+                        missing.append(f"{tok!r} (from: {cmd})")
+        assert not missing, "README references missing files:\n" + "\n".join(missing)
+
+    def test_python_module_invocations_importable(self):
+        """`python -m benchmarks.run`-style lines must name modules that
+        actually exist as files (import cost is too high here)."""
+        for cmd in self._commands():
+            m = re.search(r"python -m ([\w.]+)", cmd)
+            if not m or m.group(1) == "pytest":
+                continue
+            mod_path = Path(m.group(1).replace(".", os.sep))
+            assert (REPO / mod_path).with_suffix(".py").is_file() or (
+                REPO / mod_path / "__main__.py"
+            ).is_file(), f"README invokes missing module: {cmd}"
+
+    def test_verify_line_present_and_collects(self):
+        """The README's tier-1 verify line, smoke-run: the suite must
+        COLLECT cleanly under the exact command the README gives
+        (``--collect-only`` keeps it cheap; zero collection errors is
+        the standing tier-1 requirement from ROADMAP.md)."""
+        verify = [c for c in self._commands() if "python -m pytest" in c]
+        assert verify, "README lost its tier-1 verify command"
+        cmd = verify[0]
+        assert cmd.startswith("PYTHONPATH=src"), (
+            f"verify line must set PYTHONPATH=src, got: {cmd}"
+        )
+        proc = subprocess.run(
+            ["bash", "-c", f"cd {REPO} && {cmd} --collect-only >/dev/null"],
+            capture_output=True,
+            text=True,
+            timeout=300,
+        )
+        assert proc.returncode == 0, (
+            f"README verify line failed to collect:\n{cmd}\n{proc.stderr[-2000:]}"
+        )

@@ -1,0 +1,129 @@
+"""`EngineConfig` knob validation and the `REPRO_*` env-override layer.
+
+The env overrides only supply DEFAULTS: an explicit `EngineConfig`
+argument always wins (this is what lets equivalence tests pin their
+knobs while the CI matrix legs steer every env-following run). Unset,
+empty, and whitespace-only variables fall back to the built-in default;
+malformed values raise naming the variable. All of this is documented
+in docs/config.md — tests/test_docs.py guards the doc side.
+
+These tests run on any device count (no mesh needed), so they sit in
+tier-1 everywhere.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core.engine import EngineConfig, TMSNEngine, make_engine
+
+INT_KNOBS = [
+    ("REPRO_ROUNDS_PER_DISPATCH", "rounds_per_dispatch", 8),
+    ("REPRO_CROSS_POD_EVERY_K", "cross_pod_every_k", 1),
+    ("REPRO_CROSS_POD_TOP_K", "cross_pod_top_k", 1),
+]
+
+ALL_VARS = [v for v, _, _ in INT_KNOBS] + ["REPRO_GOSSIP_MODE"]
+
+
+@pytest.fixture(autouse=True)
+def _clean_env(monkeypatch):
+    """Each test starts from an unset REPRO_* environment (the dev's
+    shell or a CI matrix leg must not leak into assertions)."""
+    for var in ALL_VARS:
+        monkeypatch.delenv(var, raising=False)
+
+
+class TestIntOverrides:
+    @pytest.mark.parametrize("var,field,default", INT_KNOBS)
+    def test_unset_uses_builtin_default(self, var, field, default):
+        assert getattr(EngineConfig(), field) == default
+
+    @pytest.mark.parametrize("var,field,default", INT_KNOBS)
+    def test_env_value_becomes_default(self, var, field, default, monkeypatch):
+        monkeypatch.setenv(var, "3")
+        assert getattr(EngineConfig(), field) == 3
+
+    @pytest.mark.parametrize("var,field,default", INT_KNOBS)
+    @pytest.mark.parametrize("raw", ["", "   ", "\t"])
+    def test_empty_or_whitespace_falls_back(self, var, field, default, raw, monkeypatch):
+        monkeypatch.setenv(var, raw)
+        assert getattr(EngineConfig(), field) == default
+
+    @pytest.mark.parametrize("var,field,default", INT_KNOBS)
+    @pytest.mark.parametrize("raw", ["four", "4.5", "4x", "0x4"])
+    def test_malformed_value_raises_naming_the_var(self, var, field, default, raw, monkeypatch):
+        monkeypatch.setenv(var, raw)
+        with pytest.raises(ValueError, match=var):
+            EngineConfig()
+
+    @pytest.mark.parametrize("var,field,default", INT_KNOBS)
+    def test_explicit_arg_beats_env(self, var, field, default, monkeypatch):
+        monkeypatch.setenv(var, "7")
+        assert getattr(EngineConfig(**{field: 5}), field) == 5
+
+    def test_padded_int_is_accepted(self, monkeypatch):
+        monkeypatch.setenv("REPRO_ROUNDS_PER_DISPATCH", " 16 ")
+        assert EngineConfig().rounds_per_dispatch == 16
+
+
+class TestGossipModeOverride:
+    def test_unset_defaults_dense(self):
+        assert EngineConfig().gossip_mode == "dense"
+
+    def test_env_value_becomes_default(self, monkeypatch):
+        monkeypatch.setenv("REPRO_GOSSIP_MODE", "gated")
+        assert EngineConfig().gossip_mode == "gated"
+
+    def test_empty_falls_back(self, monkeypatch):
+        monkeypatch.setenv("REPRO_GOSSIP_MODE", "  ")
+        assert EngineConfig().gossip_mode == "dense"
+
+    def test_explicit_arg_beats_env(self, monkeypatch):
+        monkeypatch.setenv("REPRO_GOSSIP_MODE", "gated")
+        assert EngineConfig(gossip_mode="dense").gossip_mode == "dense"
+
+    def test_invalid_env_mode_rejected_at_engine_construction(self, monkeypatch):
+        """Mode VALIDATION lives with the engine, not the env parser —
+        an unknown mode is rejected identically whether it came from
+        the env or an explicit argument."""
+        monkeypatch.setenv("REPRO_GOSSIP_MODE", "sparse")
+        cfg = EngineConfig(n_workers=2)
+        assert cfg.gossip_mode == "sparse"  # parsing is permissive ...
+        with pytest.raises(ValueError, match="gossip_mode"):
+            make_engine(_StubWorker(), cfg)  # ... construction is not
+
+
+class TestKnobValidation:
+    """Range checks fire at engine construction for env and explicit
+    values alike."""
+
+    @pytest.mark.parametrize(
+        "field", ["rounds_per_dispatch", "cross_pod_every_k", "cross_pod_top_k", "gossip_top_k"]
+    )
+    def test_non_positive_rejected(self, field):
+        with pytest.raises(ValueError, match=field):
+            TMSNEngine(_StubWorker(), EngineConfig(n_workers=2, **{field: 0}))
+
+    def test_env_supplied_zero_also_rejected(self, monkeypatch):
+        monkeypatch.setenv("REPRO_CROSS_POD_EVERY_K", "0")
+        with pytest.raises(ValueError, match="cross_pod_every_k"):
+            TMSNEngine(_StubWorker(), EngineConfig(n_workers=2))
+
+
+def test_every_env_knob_is_a_config_field():
+    """The override surface stays in lockstep with the dataclass: every
+    REPRO_-overridable knob tested here must still be an EngineConfig
+    field (renames must update the env layer and these tests)."""
+    fields = {f.name for f in dataclasses.fields(EngineConfig)}
+    for _, field, _ in INT_KNOBS:
+        assert field in fields
+    assert "gossip_mode" in fields
+
+
+class _StubWorker:
+    """Never run — just enough surface for TMSNEngine.__init__ (which
+    validates config before touching the worker)."""
+
+    def payload_bytes(self):
+        return 8

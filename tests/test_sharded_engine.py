@@ -313,6 +313,214 @@ class TestChunkedSharded:
         assert runs[8].rounds == runs[1].rounds == 21
 
 
+# ---------------------------------------------------------------------------
+# Hierarchical (pod, workers) mesh: intra-pod gossip stays the per-round
+# all_gather over the `workers` axis; cross-pod exchange accumulates
+# improvements in a pending tier and ships only each device's top-k
+# freshest certificates over the `pod` axis every cross_pod_every_k
+# rounds. At cross_pod_every_k=1 under uniform delay the pod engine must
+# be bit-identical to the FLAT all-device engine (final certs, history,
+# adoptions) — the same monotonicity argument as gated==dense. At k>1 it
+# is an explicit, benchmark-measured approximation.
+# ---------------------------------------------------------------------------
+
+
+def _pod_mesh_or_skip(pods: int = 2):
+    n = len(jax.devices())
+    if n < 2 * pods or n % pods:
+        pytest.skip(f"pod mesh needs >= {2 * pods} devices divisible into {pods} pods")
+    return make_worker_mesh(n, pods=pods)
+
+
+def _run_pod_pair(period, dec, pods=2, **cfg):
+    """(flat all-device result, pod-mesh result) on identical configs.
+
+    Identity tests must pin cross_pod_every_k/top_k explicitly (the CI
+    pod matrix leg overrides the env defaults to an approximating k)."""
+    w = len(period)
+    pod_mesh = _pod_mesh_or_skip(pods)
+    flat = make_engine(
+        ShardableToyWorker(period, dec),
+        EngineConfig(n_workers=w, mesh=_mesh_for(w), **cfg),
+    ).run()
+    eng = make_engine(
+        ShardableToyWorker(period, dec),
+        EngineConfig(n_workers=w, mesh=pod_mesh, **cfg),
+    )
+    assert isinstance(eng, ShardedTMSNEngine)
+    return flat, eng.run()
+
+
+class TestPodMesh:
+    W = 32
+
+    def _workload(self):
+        w = self.W
+        # several simultaneous improvers per device every round, so both
+        # the gated intra tier and the cross-pod top-k tier are
+        # non-vacuous
+        return [1, 2] * (w // 2), [0.01 * (i + 1) for i in range(w)]
+
+    def test_k1_identical_to_flat_dense(self):
+        period, dec = self._workload()
+        flat, pod = _run_pod_pair(
+            period, dec, max_rounds=30, gossip_mode="dense",
+            cross_pod_every_k=1, cross_pod_top_k=1,
+        )
+        assert pod.final_certificates == flat.final_certificates
+        assert pod.history == flat.history
+        assert pod.messages_accepted == flat.messages_accepted
+        # the DCN tier actually carried traffic
+        assert 0 < pod.messages_sent_dcn < pod.messages_sent
+
+    def test_k1_identical_to_flat_gated(self):
+        period, dec = self._workload()
+        flat, pod = _run_pod_pair(
+            period, dec, max_rounds=30, gossip_mode="gated",
+            cross_pod_every_k=1, cross_pod_top_k=1,
+        )
+        assert pod.final_certificates == flat.final_certificates
+        assert pod.history == flat.history
+        assert pod.messages_accepted == flat.messages_accepted
+
+    def test_k1_fail_stop_and_laggard_identical(self):
+        period, dec = self._workload()
+        w = self.W
+        speed = [1.0] * (w - 2) + [0.25, 0.5]
+        fail = [5] + [10**6] * (w - 1)
+        flat, pod = _run_pod_pair(
+            period, dec, speed=speed, fail_round=fail, max_rounds=25,
+            gossip_mode="dense", cross_pod_every_k=1, cross_pod_top_k=1,
+        )
+        assert pod.final_certificates == flat.final_certificates
+        assert pod.history == flat.history
+        assert pod.rounds == flat.rounds == 25
+
+    def test_k1_chunked_dispatch_identical(self):
+        period, dec = self._workload()
+        w = self.W
+        pod_mesh = _pod_mesh_or_skip()
+        runs = {}
+        for rpd in (1, 8):
+            runs[rpd] = make_engine(
+                ShardableToyWorker(period, dec),
+                EngineConfig(n_workers=w, mesh=pod_mesh, rounds_per_dispatch=rpd,
+                             max_rounds=24, cross_pod_every_k=1, cross_pod_top_k=1),
+            ).run()
+        assert runs[8].final_certificates == runs[1].final_certificates
+        assert runs[8].history == runs[1].history
+
+    def test_k_gt_1_is_measured_approximation(self):
+        """k>1 trades DCN traffic for staleness: the run must stay
+        protocol-sound (monotone certs, nothing diverges) and the
+        amortized DCN footprint must fall ~k-fold; end-state equality is
+        NOT asserted — bench_scaling.py measures the divergence."""
+        period, dec = self._workload()
+        pod_mesh = _pod_mesh_or_skip()
+        w = self.W
+        runs = {}
+        for k in (1, 8):
+            runs[k] = make_engine(
+                ShardableToyWorker(period, dec),
+                EngineConfig(n_workers=w, mesh=pod_mesh, max_rounds=30,
+                             cross_pod_every_k=k, cross_pod_top_k=1),
+            ).run()
+        assert runs[8].gossip_bytes_per_round_dcn * 8 == runs[1].gossip_bytes_per_round_dcn * 1
+        assert runs[8].messages_sent_dcn < runs[1].messages_sent_dcn
+        # certificates only ever improve, even with an 8-round-stale DCN
+        assert all(c <= 0.0 for c in runs[8].final_certificates)
+        # intra-pod tier is untouched by k
+        assert runs[8].gossip_bytes_per_round_ici == runs[1].gossip_bytes_per_round_ici
+
+    def test_traffic_tier_accounting(self):
+        period, dec = self._workload()
+        w = self.W
+        pod_mesh = _pod_mesh_or_skip()
+        n_dev = pod_mesh.shape["pod"] * pod_mesh.shape["workers"]
+        wpp = pod_mesh.shape["workers"]
+        w_pod = w // pod_mesh.shape["pod"]
+        p = 8  # toy payload
+        res = make_engine(
+            ShardableToyWorker(period, dec),
+            EngineConfig(n_workers=w, mesh=pod_mesh, max_rounds=10,
+                         gossip_mode="dense", cross_pod_every_k=4, cross_pod_top_k=2),
+        ).run()
+        # intra tier: dense all_gather of the POD's workers only
+        assert res.gossip_bytes_per_round_ici == w_pod * (p + 4 + 1)
+        # cross tier: top-2 per device of (payload + f32 cert + i32 id),
+        # amortized over k=4
+        assert res.gossip_bytes_per_round_dcn == n_dev * 2 * (p + 4 + 4) // 4
+        assert res.gossip_bytes_per_round == (
+            res.gossip_bytes_per_round_ici + res.gossip_bytes_per_round_dcn
+        )
+        # gated intra tier shrinks the ICI leg to per-device candidates
+        gated = make_engine(
+            ShardableToyWorker(period, dec),
+            EngineConfig(n_workers=w, mesh=pod_mesh, max_rounds=10,
+                         gossip_mode="gated", cross_pod_every_k=4, cross_pod_top_k=2),
+        ).run()
+        assert gated.gossip_bytes_per_round_ici == w_pod * 5 + wpp * 1 * (p + 4)
+        # counter split: every push is attributed to exactly one tier
+        assert res.messages_sent_dcn > 0
+        assert res.messages_sent > res.messages_sent_dcn
+
+    def test_sparrow_pod_k1_identical_to_flat(self, small_data):
+        """The real batched Sparrow worker through the two-tier mesh:
+        bit-identical to the flat all-device engine at k=1."""
+        xtr, ytr, _, _ = small_data
+        pod_mesh = _pod_mesh_or_skip()
+        w = 16
+        cfg = _sparrow_cfg(
+            w,
+            sample_size=256,
+            capacity=16,
+            scanner=ScannerConfig(chunk_size=128, num_bins=8, gamma0=0.25),
+        )
+        ecfg = dict(n_workers=w, max_rounds=30, seed=0,
+                    cross_pod_every_k=1, cross_pod_top_k=1)
+        flat = make_engine(
+            BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg, mesh=_mesh_for(w))
+        ).run()
+        pod = make_engine(
+            BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg, mesh=pod_mesh)
+        ).run()
+        _assert_same_run(flat, pod, check_sent=False)
+        assert pod.history == flat.history
+        assert min(pod.final_certificates) < 0.0  # actually learned
+
+    def test_env_defaults_flow_into_pod_engine(self):
+        """No explicit cross-pod args: the engine follows the REPRO_*
+        env defaults (the CI pod matrix leg sets an approximating k), so
+        only env-insensitive invariants are asserted."""
+        period, dec = self._workload()
+        pod_mesh = _pod_mesh_or_skip()
+        res = make_engine(
+            ShardableToyWorker(period, dec),
+            EngineConfig(n_workers=self.W, mesh=pod_mesh, max_rounds=20),
+        ).run()
+        assert res.gossip_bytes_per_round_dcn > 0
+        assert all(c <= 0.0 for c in res.final_certificates)
+        assert res.messages_sent >= res.messages_sent_dcn > 0
+
+    def test_rejects_bad_pod_axis_order(self):
+        n = len(jax.devices())
+        if n < 4 or n % 2:
+            pytest.skip("needs >= 4 devices, even count")
+        toy = ShardableToyWorker([1] * 8, [0.1] * 8)
+        bad = jax.make_mesh((n // 2, 2), ("workers", "pod"))
+        with pytest.raises(ValueError, match="axes"):
+            make_engine(toy, EngineConfig(n_workers=8, mesh=bad))
+
+    def test_rejects_bad_cross_pod_knobs(self):
+        toy = ShardableToyWorker([1] * 8, [0.1] * 8)
+        with pytest.raises(ValueError, match="cross_pod_every_k"):
+            make_engine(toy, EngineConfig(n_workers=8, mesh=_mesh_for(8),
+                                          cross_pod_every_k=0))
+        with pytest.raises(ValueError, match="cross_pod_top_k"):
+            make_engine(toy, EngineConfig(n_workers=8, mesh=_mesh_for(8),
+                                          cross_pod_top_k=0))
+
+
 class TestFactory:
     def test_none_and_single_device_mesh_fall_back(self):
         toy = ShardableToyWorker([1] * 4, [0.1] * 4)

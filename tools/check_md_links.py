@@ -1,0 +1,150 @@
+"""Offline markdown link checker (stdlib only — runs in CI without an
+install step, and inside the fast test tier via tests/test_docs.py).
+
+  python tools/check_md_links.py README.md docs ROADMAP.md ...
+
+Checks, for every ``[text](target)`` in the given files/directories:
+
+  * relative file targets resolve to an existing file or directory
+    (relative to the markdown file that contains the link);
+  * ``#anchor`` fragments — bare or attached to a relative file —
+    resolve to a heading in the target file (GitHub slug rules:
+    lowercase, punctuation stripped, spaces to dashes);
+  * absolute http(s) URLs are NOT fetched (CI must stay hermetic);
+    they are only reported with --list-external.
+
+Exit code 1 with a per-link report when anything is broken.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — skips images' leading ! only for the text capture;
+# image paths are checked like any other relative target
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown emphasis/code ticks, drop
+    punctuation, lowercase, spaces to dashes."""
+    text = re.sub(r"[`*_]", "", heading)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # linked headings
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.strip().lower().replace(" ", "-")
+
+
+def heading_slugs(md_path: Path) -> set[str]:
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    in_fence = False
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            slug = github_slug(m.group(1))
+            n = counts.get(slug, 0)
+            counts[slug] = n + 1
+            slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def iter_links(md_path: Path):
+    in_fence = False
+    for lineno, line in enumerate(md_path.read_text(encoding="utf-8").splitlines(), 1):
+        if CODE_FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check_file(md_path: Path, repo_root: Path) -> tuple[list[str], list[str], int]:
+    """Returns (errors, external_urls, links_checked) for one file."""
+    errors: list[str] = []
+    external: list[str] = []
+    n_links = 0
+    for lineno, target in iter_links(md_path):
+        n_links += 1
+        where = f"{md_path.relative_to(repo_root)}:{lineno}"
+        if target.startswith(("http://", "https://")):
+            external.append(f"{where}: {target}")
+            continue
+        if target.startswith("mailto:"):
+            continue
+        path_part, _, fragment = target.partition("#")
+        if path_part:
+            dest = (md_path.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{where}: broken link -> {target} (no such file)")
+                continue
+        else:
+            dest = md_path.resolve()
+        if fragment:
+            if dest.is_dir() or dest.suffix.lower() not in (".md", ".markdown"):
+                errors.append(f"{where}: anchor on non-markdown target -> {target}")
+            elif fragment.lower() not in heading_slugs(dest):
+                errors.append(f"{where}: broken anchor -> {target}")
+    return errors, external, n_links
+
+
+def collect_md(paths: list[str], repo_root: Path) -> list[Path]:
+    out: list[Path] = []
+    for raw in paths:
+        p = (repo_root / raw).resolve() if not Path(raw).is_absolute() else Path(raw)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            out.append(p)
+        else:
+            print(f"warning: {raw} does not exist, skipping", file=sys.stderr)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+", help="markdown files and/or directories")
+    ap.add_argument("--root", default=None, help="repo root (default: this script's ../)")
+    ap.add_argument("--list-external", action="store_true",
+                    help="also print (unchecked) http(s) links")
+    args = ap.parse_args()
+
+    repo_root = Path(args.root).resolve() if args.root else Path(__file__).resolve().parent.parent
+    files = collect_md(args.paths, repo_root)
+    if not files:
+        print("no markdown files found", file=sys.stderr)
+        return 1
+
+    all_errors: list[str] = []
+    n_links = 0
+    for md in files:
+        errors, external, n = check_file(md, repo_root)
+        n_links += n
+        all_errors.extend(errors)
+        if args.list_external:
+            for line in external:
+                print(f"  external (unchecked): {line}")
+
+    print(f"checked {n_links} links across {len(files)} markdown files")
+    if all_errors:
+        print(f"\n{len(all_errors)} broken link(s):")
+        for err in all_errors:
+            print(f"  {err}")
+        return 1
+    print("all internal links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
