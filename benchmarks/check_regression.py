@@ -58,6 +58,12 @@ GUARDED = [
     ("scaling.sharded_w*.wall_ms_per_round", 0.20),
     ("scaling.sharded_w*.gossip_bytes_per_round", 0.20),
     ("scaling.dispatch_w*.wall_ms_per_round", 0.20),
+    # sparse pending-queue sweeps (uniform, het-delay, and the capped
+    # W=4096 run dense cannot complete) plus the fused round kernel's
+    # projected HBM floor (deterministic — drift means the kernel's
+    # operand footprint changed)
+    ("scaling.sparse_w*.wall_ms_per_round", 0.20),
+    ("scaling.round_step_w*.projected_us", 0.20),
     # hierarchical (pod, workers) mesh: per-tier footprints are exact
     # formulas (any drift is an accounting regression), wall clock gets
     # the usual cross-machine headroom until rebaselined
@@ -89,11 +95,17 @@ def write_baseline(results: dict, path: str, wall_clock_extra: float) -> int:
         if tol is not None:
             metrics[name] = {"value": value, "tolerance": tol}
     schema = results.get("_schema", {})
+    source = {k: schema.get(k) for k in ("devices", "backend", "profile")}
+    # the RESULTS format version (and the SHA the numbers came from):
+    # lets check() flag a cross-version comparison instead of silently
+    # comparing metrics whose semantics may have shifted between formats
+    source["results_version"] = schema.get("version")
+    source["git_sha"] = schema.get("git_sha")
     with open(path, "w") as f:
         json.dump(
             {
                 "schema_version": 1,
-                "source": {k: schema.get(k) for k in ("devices", "backend", "profile")},
+                "source": source,
                 "metrics": metrics,
             },
             f,
@@ -123,6 +135,18 @@ def check(results: dict, baseline: dict, scale: float) -> int:
                 "--write-baseline <results.json>"
             )
             return 1
+    # same machine shape but a different results-format version: the
+    # metrics MAY have shifted meaning between formats, so say so out
+    # loud instead of silently comparing (shape matches, so a comparison
+    # is still more useful than a refusal — rebaseline to clear this)
+    if schema.get("version") != source.get("results_version"):
+        print(
+            f"WARN: results schema version {schema.get('version')!r} differs from "
+            f"the baseline's recorded {source.get('results_version')!r} on a "
+            "matching machine shape — comparing anyway, but metric semantics may "
+            "have changed between formats; rebaseline with --write-baseline to "
+            "clear this warning"
+        )
     for name, spec in sorted(baseline["metrics"].items()):
         base_value, tol = spec["value"], spec["tolerance"] * scale
         current = results.get(name)

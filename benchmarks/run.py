@@ -1,14 +1,17 @@
 """Benchmark entry point — one module per paper table/figure plus the
 framework-level benches. Prints ``name,value,derived`` CSV lines.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--json out.json]
+  PYTHONPATH=src python -m benchmarks.run [--full|--tiny] [--json out.json]
 
 (--full runs the paper-scale sizes; default is the quick profile so the
-suite completes on the CPU container. --json additionally writes the
-collected ``{name: value}`` dict as machine-readable JSON — the format
-CI artifacts and the BENCH_*.json trajectory share. The JSON carries a
-``_schema`` entry with a format version and the machine shape (device
-count, backend) so the regression guard and trajectory plots can key on
+suite completes on the CPU container; --tiny runs only the
+minutes-not-hours benches — the every-push ``bench-smoke`` CI tier that
+keeps a results artifact on every commit. --json additionally writes
+the collected ``{name: value}`` dict as machine-readable JSON — the
+format CI artifacts and the BENCH_*.json trajectory share. The JSON
+carries a ``_schema`` entry with a format version, the machine shape
+(device count, backend), the bench profile, and the git SHA the run
+measured, so the regression guard and trajectory plots can key on
 comparable runs; metric keys never start with ``_``.)
 """
 
@@ -16,8 +19,32 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
+
+#: the --tiny selection: benches that finish in ~seconds on a 2-core
+#: runner (still real measurements — stopping rule, kernel microbench,
+#: protocol counters) so every push gets a comparable JSON artifact
+TINY_BENCHES = ["stopping", "kernels", "protocol"]
+
+
+def _git_sha() -> str | None:
+    """SHA of the tree the numbers were measured on (None outside git —
+    e.g. a source tarball; the artifact is still valid, just unpinned)."""
+    try:
+        proc = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            capture_output=True,
+            text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            timeout=10,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    sha = proc.stdout.strip()
+    return sha if proc.returncode == 0 and sha else None
 
 
 def _parse_value(raw: str):
@@ -58,11 +85,18 @@ def collect(selected: list[str], benches: dict, quick: bool) -> tuple[dict, int]
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument(
+        "--tiny", action="store_true",
+        help=f"run only the fast benches ({','.join(TINY_BENCHES)}) — the "
+        "every-push bench-smoke profile",
+    )
     ap.add_argument("--only", default=None, help="comma-separated bench names")
     ap.add_argument(
         "--json", default=None, metavar="OUT", help="also write {name: value} JSON here"
     )
     args = ap.parse_args()
+    if args.full and args.tiny:
+        ap.error("--full and --tiny are mutually exclusive")
     quick = not args.full
 
     from benchmarks import (
@@ -93,7 +127,12 @@ def main() -> None:
     except ImportError:
         pass
 
-    selected = args.only.split(",") if args.only else list(benches)
+    if args.only:
+        selected = args.only.split(",")
+    elif args.tiny:
+        selected = list(TINY_BENCHES)
+    else:
+        selected = list(benches)
     print("name,value,derived", flush=True)
     results, failures = collect(selected, benches, quick)
     if args.json:
@@ -101,10 +140,11 @@ def main() -> None:
 
         payload = {
             "_schema": {
-                "version": 2,
+                "version": 3,
                 "devices": jax.device_count(),
                 "backend": jax.default_backend(),
-                "profile": "full" if args.full else "quick",
+                "profile": "full" if args.full else ("tiny" if args.tiny else "quick"),
+                "git_sha": _git_sha(),
             },
             **results,
         }

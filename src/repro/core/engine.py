@@ -244,6 +244,29 @@ class EngineConfig:
     cross_pod_top_k: int = dataclasses.field(
         default_factory=lambda: _env_int("REPRO_CROSS_POD_TOP_K", 1)
     )
+    #: bounded per-destination pending-queue capacity C for the
+    #: in-flight state. 0 (default) keeps the dense ``(W, W, D)``
+    #: certificate buffer — the exact oracle. C >= 1 replaces it with a
+    #: per-destination ``(W, C)`` queue of pending (cert, src, due,
+    #: ring-slot) entries, evicting worst-certificate-first on
+    #: overflow: O(W·C) state instead of O(W²·D). When C covers the
+    #: peak per-destination occupancy the sparse run is bit-identical
+    #: to the dense oracle (``SimResult.messages_evicted == 0`` is the
+    #: run-level witness); smaller C is an explicit, measured
+    #: approximation — see docs/config.md. Env-overridable so a CI
+    #: matrix leg can rerun the tier sparse: REPRO_INFLIGHT_CAPACITY.
+    inflight_capacity: int = dataclasses.field(
+        default_factory=lambda: _env_int("REPRO_INFLIGHT_CAPACITY", 0)
+    )
+    #: delivery implementation of the sparse path (ignored while
+    #: ``inflight_capacity == 0``): "pallas" routes delivery-argmin +
+    #: eps-gated accept + laggard-credit update through the fused
+    #: ``kernels/round_step.py`` kernel (interpret mode off-TPU);
+    #: "ref" uses the pure-jnp oracle in ``kernels/ref.py``. Both are
+    #: bit-identical — pinned in tests. Env: REPRO_ROUND_STEP_IMPL.
+    round_step_impl: str = dataclasses.field(
+        default_factory=lambda: _env_str("REPRO_ROUND_STEP_IMPL", "pallas")
+    )
     #: optional ``jax.sharding.Mesh``: a 1-D ``("workers",)`` mesh
     #: shards the worker axis over one interconnect tier; a 2-D
     #: ``("pod", "workers")`` mesh adds the hierarchical cross-pod tier
@@ -255,6 +278,115 @@ class EngineConfig:
     mesh: Any = None
 
 
+class PendingQueue(NamedTuple):
+    """Bounded per-destination pending-message state (the sparse
+    replacement for the dense ``(W, W, D)`` in-flight buffer when
+    :attr:`EngineConfig.inflight_capacity` > 0).
+
+    Each destination row holds up to C pending messages; ``cert`` is
+    +inf on empty slots. ``due`` is the ABSOLUTE delivery round, so a
+    delivered entry only needs its cert cleared — a stale ``due`` can
+    never match a later (monotonically increasing) round. ``slot`` is
+    the snapshot-ring slot captured at push time (``push_round % D``),
+    which equals the dense engine's payload lookup
+    ``(r - delay[src, dst]) % D`` at delivery."""
+
+    cert: jnp.ndarray  # (W, C) f32; +inf = empty
+    src: jnp.ndarray  # (W, C) i32 global source worker id
+    due: jnp.ndarray  # (W, C) i32 absolute delivery round (-1 = empty)
+    slot: jnp.ndarray  # (W, C) i32 ring slot of the payload
+
+
+def _empty_queue(w: int, capacity: int) -> PendingQueue:
+    return PendingQueue(
+        cert=jnp.full((w, capacity), jnp.inf, jnp.float32),
+        src=jnp.zeros((w, capacity), jnp.int32),
+        due=jnp.full((w, capacity), -1, jnp.int32),
+        slot=jnp.zeros((w, capacity), jnp.int32),
+    )
+
+
+def _queue_push(
+    queue: PendingQueue,
+    score: jnp.ndarray,
+    alive: jnp.ndarray,
+    local_gids: jnp.ndarray,
+    delay_rows: jnp.ndarray,
+    r: jnp.ndarray,
+    depth: int,
+) -> tuple[PendingQueue, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Push this round's broadcast candidates into every local
+    destination's pending queue, evicting worst-certificate-first.
+
+    ``score`` is (W,) f32 over GLOBAL source ids: the candidate's
+    certificate where that source broadcasts this round, +inf where it
+    does not. This one shape serves every call site — single-device
+    (``where(improved, certs, inf)``), the sharded tier-1 control plane
+    (always dense-width, both gossip modes), and the pod-mesh cross-pod
+    flush. ``alive`` (W_local,) masks destinations, ``local_gids``
+    (W_local,) are the destinations' global ids (self-exclusion),
+    ``delay_rows`` is (W_local, W) indexed [local dst, global src].
+
+    Candidate pre-filter: only the globally best ``C + 1`` candidates
+    can ever enter a kept top-C (a candidate ranked below C + 1 has at
+    least C better non-self competitors at every destination), so the
+    merge sorts (W_local, C + min(C+1, W)) instead of (W_local, C + W).
+    Eviction keeps the lexicographically smallest C by (cert, src, due)
+    — worst-certificate-first, ties dropping the higher source id, so
+    the survivor set always contains every entry the dense delivery
+    argmin could select.
+
+    Returns ``(queue, n_pushed, n_evicted, occ_pre_max)``. The counters
+    are LOGICAL (capacity-independent): ``n_pushed`` equals the dense
+    engine's ``sum(push_mask)``; ``n_evicted`` counts every candidate
+    offered but not retained (including pre-filtered ones — if anything
+    was pre-filtered the queue provably fills to C, so the accounting
+    stays exact); ``occ_pre_max`` is the peak pre-eviction occupancy.
+    ``n_evicted == 0`` over a whole run certifies the sparse run as
+    bit-identical to the dense oracle.
+    """
+    w = score.shape[0]
+    wl, cap = queue.cert.shape
+    k = min(cap + 1, w)
+    order = jnp.argsort(score, stable=True)[:k].astype(jnp.int32)
+    c_cert = score[order]  # (k,) sorted best candidates
+    val = (
+        jnp.isfinite(c_cert)[None, :]
+        & (order[None, :] != local_gids[:, None])
+        & alive[:, None]
+    )
+    cand_cert = jnp.where(val, c_cert[None, :], jnp.inf)  # (wl, k)
+    cand_src = jnp.broadcast_to(order[None, :], (wl, k))
+    cand_due = jnp.where(
+        val, r + jnp.take_along_axis(delay_rows, cand_src, axis=1), -1
+    )
+    cand_slot = jnp.where(val, jnp.int32(r % depth), 0)
+
+    m_cert = jnp.concatenate([queue.cert, cand_cert], axis=1)
+    m_src = jnp.concatenate([queue.src, cand_src], axis=1)
+    m_due = jnp.concatenate([queue.due, cand_due], axis=1)
+    m_slot = jnp.concatenate([queue.slot, cand_slot], axis=1)
+    keep = jnp.lexsort((m_due, m_src, m_cert), axis=-1)[:, :cap]
+    new = PendingQueue(
+        cert=jnp.take_along_axis(m_cert, keep, axis=1),
+        src=jnp.take_along_axis(m_src, keep, axis=1),
+        due=jnp.take_along_axis(m_due, keep, axis=1),
+        slot=jnp.take_along_axis(m_slot, keep, axis=1),
+    )
+
+    n_bcast = jnp.sum(jnp.isfinite(score), dtype=jnp.int32)
+    self_b = jnp.isfinite(score[local_gids]).astype(jnp.int32)
+    n_cand = jnp.where(alive, n_bcast - self_b, 0)  # (wl,) logical offers
+    occ_pre = jnp.sum(jnp.isfinite(queue.cert), axis=1, dtype=jnp.int32) + n_cand
+    occ_after = jnp.sum(jnp.isfinite(new.cert), axis=1, dtype=jnp.int32)
+    return (
+        new,
+        jnp.sum(n_cand, dtype=jnp.int32),
+        jnp.sum(occ_pre - occ_after, dtype=jnp.int32),
+        jnp.max(occ_pre),
+    )
+
+
 class EngineState(NamedTuple):
     worker: Any
     certs: jnp.ndarray  # (W,) f32 — post-round certificates, carried so
@@ -262,7 +394,9 @@ class EngineState(NamedTuple):
     alive: jnp.ndarray  # (W,) bool
     credit: jnp.ndarray  # (W,) f32 compute credit (laggard model)
     clock: jnp.ndarray  # (W,) f32 per-worker simulated seconds
-    inflight: jnp.ndarray  # (W, W, D) f32 — [dst, src, d] certs; +inf = empty
+    #: dense mode: (W, W, D) f32 — [dst, src, d] certs, +inf = empty.
+    #: sparse mode (inflight_capacity > 0): a :class:`PendingQueue`
+    inflight: Any
     ring: Any  # model snapshots, leading (D, W) — (n_pods*D, W) on a pod mesh
     round: jnp.ndarray  # () i32
     sent: jnp.ndarray  # () i32
@@ -275,6 +409,14 @@ class EngineState(NamedTuple):
     #: () i32 — pushes that crossed a pod boundary (DCN tier); a
     #: (n_dev,) per-shard partial on the sharded engines, like `sent`
     sent_dcn: jnp.ndarray
+    #: () i32 — sparse-mode candidates offered but not retained
+    #: (capacity evictions); constant 0 in dense mode and, like `sent`,
+    #: a (n_dev,) per-shard partial on the sharded engines
+    evicted: jnp.ndarray
+    #: () i32 — peak pre-eviction pending-queue occupancy seen by any
+    #: destination (a measured lower bound on the capacity that makes
+    #: the run exact); (n_dev,) per-shard partials when sharded
+    occ_peak: jnp.ndarray
 
 
 class RoundInfo(NamedTuple):
@@ -319,6 +461,16 @@ class TMSNEngine:
             raise ValueError(
                 f"cross_pod_top_k must be >= 1, got {config.cross_pod_top_k}"
             )
+        if config.inflight_capacity < 0:
+            raise ValueError(
+                f"inflight_capacity must be >= 0, got {config.inflight_capacity}"
+            )
+        if config.round_step_impl not in ("pallas", "ref"):
+            raise ValueError(
+                f"round_step_impl must be 'pallas' or 'ref', got {config.round_step_impl!r}"
+            )
+        #: 0 = dense (W, W, D) oracle; C >= 1 = bounded PendingQueue
+        self._capacity = int(config.inflight_capacity)
 
         delay = np.asarray(config.delay_rounds)
         if delay.ndim == 0:
@@ -417,13 +569,17 @@ class TMSNEngine:
         w, d = cfg.n_workers, self._depth
         wstate = self.worker.init_batch(w, cfg.seed)
         models = self.worker.export_models(wstate)
+        if self._capacity:
+            inflight = _empty_queue(w, self._capacity)
+        else:
+            inflight = jnp.full((w, w, d), jnp.inf, jnp.float32)
         return EngineState(
             worker=wstate,
             certs=jnp.asarray(self.worker.certificates(wstate), jnp.float32),
             alive=jnp.ones((w,), bool),
             credit=jnp.zeros((w,), jnp.float32),
             clock=jnp.zeros((w,), jnp.float32),
-            inflight=jnp.full((w, w, d), jnp.inf, jnp.float32),
+            inflight=inflight,
             ring=_tree_stack_rows(models, d),
             round=jnp.zeros((), jnp.int32),
             sent=jnp.zeros((), jnp.int32),
@@ -432,6 +588,55 @@ class TMSNEngine:
             cost_total=jnp.zeros((), jnp.float32),
             xpend=jnp.zeros((w,), bool),
             sent_dcn=jnp.zeros((), jnp.int32),
+            evicted=jnp.zeros((), jnp.int32),
+            occ_peak=jnp.zeros((), jnp.int32),
+        )
+
+    def _deliver_sparse(
+        self,
+        queue: PendingQueue,
+        certs0: jnp.ndarray,
+        alive: jnp.ndarray,
+        credit: jnp.ndarray,
+        speed_norm: jnp.ndarray,
+        r: jnp.ndarray,
+    ):
+        """Fused sparse delivery: argmin over this round's due entries
+        (ties to the lowest source id, matching the dense argmin),
+        eps-gated accept, arrival clearing, and the laggard-credit
+        update — one kernel call (``round_step_impl`` picks the Pallas
+        kernel or the jnp reference; both are bit-identical).
+
+        Returns ``(queue', best_cert, best_src, best_slot, take,
+        n_arrivals, credit', active)``; the imports are deferred so
+        ``repro.core.engine`` never pulls the kernels package (and its
+        worker-side dependencies) at module import time.
+        """
+        if self.config.round_step_impl == "ref":
+            from repro.kernels.ref import round_step_ref as deliver
+        else:
+            from repro.kernels.ops import round_deliver as deliver
+        q_cert, best_cert, best_src, best_slot, take, n_arr, credit2, active = deliver(
+            queue.cert,
+            queue.due,
+            queue.src,
+            queue.slot,
+            certs0,
+            alive,
+            credit,
+            speed_norm,
+            r,
+            eps=float(self.config.eps),
+        )
+        return (
+            queue._replace(cert=q_cert),
+            best_cert,
+            best_src,
+            best_slot,
+            take,
+            jnp.sum(n_arr, dtype=jnp.int32),
+            credit2,
+            active,
         )
 
     def _round_step(self, state: EngineState) -> tuple[EngineState, RoundInfo]:
@@ -445,16 +650,41 @@ class TMSNEngine:
         # third certificates() call per round)
         certs0 = state.certs
 
-        # --- 1. deliver arrivals due this round ---------------------------
-        arr = state.inflight[:, :, 0]  # (dst, src) certs
-        arr_live = jnp.where(alive[:, None], arr, jnp.inf)
-        best_src = jnp.argmin(arr_live, axis=1)  # (W,)
-        best_cert = arr_live[dst_idx, best_src]
-        take = accepts(certs0, best_cert, cfg.eps) & jnp.isfinite(best_cert)
-        n_arrivals = jnp.sum(jnp.isfinite(arr), dtype=jnp.int32)
+        # --- 1.+2.(+3. credit) deliver arrivals due this round ------------
+        if self._capacity:
+            # sparse path: delivery argmin + accept gate + credit are
+            # one fused kernel call; clearing the delivered certs
+            # replaces the dense buffer shift (dues are absolute)
+            (
+                inflight,
+                best_cert,
+                best_src,
+                sent_slot,
+                take,
+                n_arrivals,
+                credit,
+                active,
+            ) = self._deliver_sparse(
+                state.inflight, certs0, alive, state.credit, self._speed_norm, r
+            )
+        else:
+            arr = state.inflight[:, :, 0]  # (dst, src) certs
+            arr_live = jnp.where(alive[:, None], arr, jnp.inf)
+            best_src = jnp.argmin(arr_live, axis=1)  # (W,)
+            best_cert = arr_live[dst_idx, best_src]
+            take = accepts(certs0, best_cert, cfg.eps) & jnp.isfinite(best_cert)
+            n_arrivals = jnp.sum(jnp.isfinite(arr), dtype=jnp.int32)
+            sent_slot = (r - self._delay[best_src, dst_idx]) % depth
+            # shift the in-flight buffer
+            inflight = jnp.concatenate(
+                [state.inflight[:, :, 1:], jnp.full((w, w, 1), jnp.inf, jnp.float32)],
+                axis=2,
+            )
+            credit = state.credit + self._speed_norm
+            active = alive & (credit >= 1.0 - 1e-6)
+            credit = jnp.where(active, credit - 1.0, credit)
         n_taken = jnp.sum(take, dtype=jnp.int32)
 
-        sent_slot = (r - self._delay[best_src, dst_idx]) % depth
         in_models = jax.tree_util.tree_map(
             lambda a: a[sent_slot, best_src], state.ring
         )
@@ -470,16 +700,7 @@ class TMSNEngine:
             (state.worker, in_models, best_cert, take),
         )
 
-        # --- 2. shift the in-flight buffer --------------------------------
-        inflight = jnp.concatenate(
-            [state.inflight[:, :, 1:], jnp.full((w, w, 1), jnp.inf, jnp.float32)], axis=2
-        )
-
         # --- 3. one segment per live, credit-covered worker ---------------
-        credit = state.credit + self._speed_norm
-        active = alive & (credit >= 1.0 - 1e-6)
-        credit = jnp.where(active, credit - 1.0, credit)
-
         need = self.worker.needs_resample(wstate) & active
         wstate, resample_cost = jax.lax.cond(
             jnp.any(need),
@@ -498,16 +719,29 @@ class TMSNEngine:
         # --- 4. broadcast strict improvements -----------------------------
         # (eps gates acceptance only — see the note in simulator.run)
         improved = fired & improves(certs_pre, certs, 0.0) & scan_mask
-        d_idx = jnp.arange(depth)[None, None, :]
-        # push_mask[dst, src, d] — delay is indexed [src, dst]
-        push_mask = (
-            improved[None, :, None]
-            & alive[:, None, None]
-            & (dst_idx[:, None] != dst_idx[None, :])[:, :, None]
-            & (d_idx == (self._delay.T[:, :, None] - 1))
-        )
-        inflight = jnp.where(push_mask, certs[None, :, None], inflight)
-        n_pushed = jnp.sum(push_mask, dtype=jnp.int32)
+        n_evicted = jnp.zeros((), jnp.int32)
+        occ_pre_max = jnp.zeros((), jnp.int32)
+        if self._capacity:
+            inflight, n_pushed, n_evicted, occ_pre_max = _queue_push(
+                inflight,
+                jnp.where(improved, certs, jnp.inf),
+                alive,
+                dst_idx,
+                self._delay.T,  # (dst, src) rows
+                r,
+                depth,
+            )
+        else:
+            d_idx = jnp.arange(depth)[None, None, :]
+            # push_mask[dst, src, d] — delay is indexed [src, dst]
+            push_mask = (
+                improved[None, :, None]
+                & alive[:, None, None]
+                & (dst_idx[:, None] != dst_idx[None, :])[:, :, None]
+                & (d_idx == (self._delay.T[:, :, None] - 1))
+            )
+            inflight = jnp.where(push_mask, certs[None, :, None], inflight)
+            n_pushed = jnp.sum(push_mask, dtype=jnp.int32)
 
         # --- 5. snapshot the models into the ring -------------------------
         # gated to broadcasters: ring[slot, src] is only ever read for a
@@ -539,6 +773,8 @@ class TMSNEngine:
             cost_total=state.cost_total + jnp.sum(cost),
             xpend=state.xpend,
             sent_dcn=state.sent_dcn,
+            evicted=state.evicted + n_evicted,
+            occ_peak=jnp.maximum(state.occ_peak, occ_pre_max),
         )
         info = RoundInfo(
             certs=certs, changed=take | improved, clock=clock, alive=alive
@@ -607,6 +843,7 @@ class TMSNEngine:
             discarded=np.asarray(state.discarded),
             payload_bytes=self.worker.payload_bytes(),
             sent_dcn=np.asarray(state.sent_dcn),
+            evicted=np.asarray(state.evicted),
         )
         final_models = [
             jax.tree_util.tree_map(lambda a, i=i: a[i], models)
@@ -626,6 +863,7 @@ class TMSNEngine:
             gossip_bytes_per_round_ici=ici_bytes,
             gossip_bytes_per_round_dcn=dcn_bytes,
             gossip_mode=self._gossip_mode(),
+            inflight_occupancy_peak=int(np.max(np.asarray(state.occ_peak))),
         )
 
     def _gossip_split(self) -> tuple[int, int]:

@@ -81,6 +81,14 @@ What changes relative to the single-device engine:
     rounds and the per-round collectives stay inside the compiled
     program. Target-crossing detection inside the scan uses a psum
     across shards;
+  * **sparse in-flight state** (``EngineConfig.inflight_capacity > 0``)
+    swaps the per-shard ``(W_local, W, D)`` buffer for bounded
+    destination-sharded pending queues ``(W_local, C)`` fed by the same
+    gathered tier-1 (and, on a pod mesh, tier-2 flush) candidates, with
+    delivery + eps-gated accept + credit update fused into
+    ``kernels/round_step.py`` — bit-identical to the dense buffer at
+    sufficient capacity (``tests/test_sparse_inflight.py``), with every
+    eviction counted in per-shard ``evicted`` / ``occ_peak`` partials;
   * traffic counters are per-shard partials of shape ``(n_dev,)``
     (summing inside the step would cost a ``psum`` per round);
     :meth:`~repro.core.result.TrafficCounters.from_shards` reduces
@@ -130,6 +138,7 @@ from repro.core.engine import (
     EngineState,
     RoundInfo,
     TMSNEngine,
+    _queue_push,
 )
 from repro.core.protocol import accepts, improves
 
@@ -201,6 +210,8 @@ class ShardedTMSNEngine(TMSNEngine):
             cost_total=P(wx),
             xpend=P(wx),
             sent_dcn=P(wx),
+            evicted=P(wx),
+            occ_peak=P(wx),
         )
         # stacked over the chunk: leading scan axis, worker axis second
         infos_specs = RoundInfo(
@@ -257,6 +268,8 @@ class ShardedTMSNEngine(TMSNEngine):
             discarded=zi,
             cost_total=jnp.zeros((self._n_dev,), jnp.float32),
             sent_dcn=zi,
+            evicted=zi,
+            occ_peak=zi,
         )
         if self._n_pods > 1:
             # one private snapshot ring per pod (the intra-pod gather
@@ -346,17 +359,34 @@ class ShardedTMSNEngine(TMSNEngine):
         # third certificates() call per round)
         certs0 = state.certs  # (wl,)
 
-        # --- 1. deliver arrivals due this round (all-local: the buffer
-        # is destination-sharded with a global source axis) -----------------
-        arr = state.inflight[:, :, 0]  # (wl dst, W src) certs
-        arr_live = jnp.where(alive[:, None], arr, jnp.inf)
-        best_src = jnp.argmin(arr_live, axis=1)  # (wl,) global src ids
-        best_cert = arr_live[row_idx, best_src]
-        take = accepts(certs0, best_cert, cfg.eps) & jnp.isfinite(best_cert)
-        n_arrivals = jnp.sum(jnp.isfinite(arr), dtype=jnp.int32)
+        # --- 1. deliver arrivals due this round (all-local: both
+        # representations are destination-sharded with a global source
+        # axis) --------------------------------------------------------------
+        if self._capacity:
+            # sparse: delivery argmin + accept gate + laggard credit are
+            # one fused kernel call on the (wl, C) pending queue; the
+            # queue stores the ring slot, so no delay lookup is needed
+            (
+                inflight,
+                best_cert,
+                best_src,
+                sent_slot,
+                take,
+                n_arrivals,
+                credit,
+                active,
+            ) = self._deliver_sparse(
+                state.inflight, certs0, alive, state.credit, consts.speed_norm, r
+            )
+        else:
+            arr = state.inflight[:, :, 0]  # (wl dst, W src) certs
+            arr_live = jnp.where(alive[:, None], arr, jnp.inf)
+            best_src = jnp.argmin(arr_live, axis=1)  # (wl,) global src ids
+            best_cert = arr_live[row_idx, best_src]
+            take = accepts(certs0, best_cert, cfg.eps) & jnp.isfinite(best_cert)
+            n_arrivals = jnp.sum(jnp.isfinite(arr), dtype=jnp.int32)
+            sent_slot = (r - consts.delay_t[row_idx, best_src]) % depth
         n_taken = jnp.sum(take, dtype=jnp.int32)
-
-        sent_slot = (r - consts.delay_t[row_idx, best_src]) % depth
         in_models = jax.tree_util.tree_map(
             lambda a: a[sent_slot, best_src], state.ring
         )
@@ -373,15 +403,16 @@ class ShardedTMSNEngine(TMSNEngine):
             (state.worker, in_models, best_cert, take),
         )
 
-        # --- 2. shift the in-flight buffer --------------------------------
-        inflight = jnp.concatenate(
-            [state.inflight[:, :, 1:], jnp.full((wl, w, 1), jnp.inf, jnp.float32)], axis=2
-        )
-
-        # --- 3. one segment per live, credit-covered local worker ---------
-        credit = state.credit + consts.speed_norm
-        active = alive & (credit >= 1.0 - 1e-6)
-        credit = jnp.where(active, credit - 1.0, credit)
+        # --- 2.+3. shift the dense buffer, accrue compute credit (both
+        # already folded into the fused kernel on the sparse path) ----------
+        if not self._capacity:
+            inflight = jnp.concatenate(
+                [state.inflight[:, :, 1:], jnp.full((wl, w, 1), jnp.inf, jnp.float32)],
+                axis=2,
+            )
+            credit = state.credit + consts.speed_norm
+            active = alive & (credit >= 1.0 - 1e-6)
+            credit = jnp.where(active, credit - 1.0, credit)
 
         need = self.worker.needs_resample(wstate) & active
         wstate, resample_cost = jax.lax.cond(
@@ -484,17 +515,34 @@ class ShardedTMSNEngine(TMSNEngine):
                     gathered["models"],
                 )
 
-        d_idx = jnp.arange(depth)[None, None, :]
-        # push_mask[local dst, global src, d]; on a pod mesh bcast_all
-        # is zero outside this pod, so tier-1 pushes stay intra-pod
-        push_mask = (
-            bcast_all[None, :, None]
-            & alive[:, None, None]
-            & (local_ids[:, None] != jnp.arange(w)[None, :])[:, :, None]
-            & (d_idx == (consts.delay_t[:, :, None] - 1))
-        )
-        inflight = jnp.where(push_mask, certs_all[None, :, None], inflight)
-        n_pushed = jnp.sum(push_mask, dtype=jnp.int32)
+        n_evicted = jnp.zeros((), jnp.int32)
+        occ_pre_max = jnp.zeros((), jnp.int32)
+        if self._capacity:
+            # tier-1 push into the (wl, C) pending queues: the gathered
+            # control plane is dense-width in both gossip modes, so one
+            # (W,) candidate score serves dense and gated alike; on a
+            # pod mesh bcast_all is zero outside this pod
+            inflight, n_pushed, n_evicted, occ_pre_max = _queue_push(
+                inflight,
+                jnp.where(bcast_all, certs_all, jnp.inf),
+                alive,
+                local_ids,
+                consts.delay_t,
+                r,
+                depth,
+            )
+        else:
+            d_idx = jnp.arange(depth)[None, None, :]
+            # push_mask[local dst, global src, d]; on a pod mesh bcast_all
+            # is zero outside this pod, so tier-1 pushes stay intra-pod
+            push_mask = (
+                bcast_all[None, :, None]
+                & alive[:, None, None]
+                & (local_ids[:, None] != jnp.arange(w)[None, :])[:, :, None]
+                & (d_idx == (consts.delay_t[:, :, None] - 1))
+            )
+            inflight = jnp.where(push_mask, certs_all[None, :, None], inflight)
+            n_pushed = jnp.sum(push_mask, dtype=jnp.int32)
 
         # --- gossip, tier 2 (cross-pod, DCN): improvements accumulate
         # in the pending mask and the freshest certificates flush over
@@ -540,6 +588,22 @@ class ShardedTMSNEngine(TMSNEngine):
                     .at[gx["ids"]]
                     .set(jnp.ones_like(gx["ids"], bool), mode="drop")
                 )
+                flushed = jnp.zeros((wl,), bool).at[rows].set(valid)
+                if self._capacity:
+                    # same queue push as tier 1, with the candidate score
+                    # masked to cross-pod sources (same-pod destinations
+                    # already heard these via tier 1)
+                    inflight, nx, ne, occ = _queue_push(
+                        inflight,
+                        jnp.where(xbcast & (src_pod != pod_idx), xcerts, jnp.inf),
+                        alive,
+                        local_ids,
+                        consts.delay_t,
+                        r,
+                        depth,
+                    )
+                    return (xpend & ~flushed, inflight, ring, nx, ne, occ)
+                d_idx = jnp.arange(depth)[None, None, :]
                 xpush = (
                     xbcast[None, :, None]
                     & alive[:, None, None]
@@ -548,25 +612,38 @@ class ShardedTMSNEngine(TMSNEngine):
                     & (d_idx == (consts.delay_t[:, :, None] - 1))
                 )
                 inflight = jnp.where(xpush, xcerts[None, :, None], inflight)
-                flushed = jnp.zeros((wl,), bool).at[rows].set(valid)
+                z = jnp.zeros((), jnp.int32)
                 return (
                     xpend & ~flushed,
                     inflight,
                     ring,
                     jnp.sum(xpush, dtype=jnp.int32),
+                    z,
+                    z,
                 )
 
             if int(cfg.cross_pod_every_k) == 1:
-                xpend, inflight, ring, n_pushed_x = _flush((xpend, inflight, ring))
+                xpend, inflight, ring, n_pushed_x, ne_x, occ_x = _flush(
+                    (xpend, inflight, ring)
+                )
             else:
                 # `r` is replicated, so every device takes the same
                 # branch and the pod-axis collective stays uniform
-                xpend, inflight, ring, n_pushed_x = jax.lax.cond(
+                xpend, inflight, ring, n_pushed_x, ne_x, occ_x = jax.lax.cond(
                     (r % int(cfg.cross_pod_every_k)) == 0,
                     _flush,
-                    lambda args: (args[0], args[1], args[2], jnp.zeros((), jnp.int32)),
+                    lambda args: (
+                        args[0],
+                        args[1],
+                        args[2],
+                        jnp.zeros((), jnp.int32),
+                        jnp.zeros((), jnp.int32),
+                        jnp.zeros((), jnp.int32),
+                    ),
                     (xpend, inflight, ring),
                 )
+            n_evicted = n_evicted + ne_x
+            occ_pre_max = jnp.maximum(occ_pre_max, occ_x)
 
         new_state = EngineState(
             worker=wstate,
@@ -584,6 +661,8 @@ class ShardedTMSNEngine(TMSNEngine):
             cost_total=state.cost_total + jnp.sum(cost),
             xpend=xpend,
             sent_dcn=state.sent_dcn + n_pushed_x,
+            evicted=state.evicted + n_evicted,
+            occ_peak=jnp.maximum(state.occ_peak, occ_pre_max),
         )
         info = RoundInfo(
             certs=certs, changed=take | improved, clock=clock, alive=alive

@@ -47,6 +47,10 @@ class TrafficCounters:
     #: the byte figures are derived properties below, so the split can
     #: never drift from the totals. Single-tier substrates report 0.
     sent_dcn: int = 0
+    #: sparse-engine capacity evictions: candidates offered to a
+    #: bounded pending queue but not retained (0 on the dense oracle
+    #: and the event sim; 0 on a sparse run certifies it exact)
+    evicted: int = 0
     #: payload size one push carries (kept so the derived byte split
     #: stays consistent with ``bytes_broadcast``)
     payload_bytes: int = 0
@@ -67,6 +71,7 @@ class TrafficCounters:
         discarded: Any,
         payload_bytes: int,
         sent_dcn: Any = 0,
+        evicted: Any = 0,
     ) -> "TrafficCounters":
         """Reduce per-shard partial counters into global totals.
 
@@ -85,6 +90,7 @@ class TrafficCounters:
             discarded=int(np.sum(discarded)),
             bytes_broadcast=total * payload_bytes,
             sent_dcn=int(np.sum(sent_dcn)),
+            evicted=int(np.sum(evicted)),
             payload_bytes=payload_bytes,
         )
 
@@ -130,6 +136,15 @@ class SimResult:
     #: which gossip policy produced ``gossip_bytes_per_round``
     #: ("dense" | "gated"; single-device substrates report "dense")
     gossip_mode: str = "dense"
+    #: sparse-engine capacity evictions over the whole run (0 on the
+    #: dense oracle and the event sim). 0 on a sparse run is the
+    #: run-level witness that bounded capacity changed nothing — the
+    #: run is bit-identical to the dense oracle.
+    messages_evicted: int = 0
+    #: peak pre-eviction pending-queue occupancy any destination saw
+    #: (sparse engine only; the measured capacity floor for an exact
+    #: rerun of the same config). 0 on dense/event substrates.
+    inflight_occupancy_peak: int = 0
 
     def best_certificate_trace(self) -> list[tuple[float, float]]:
         """Monotone (time, best-cert-so-far) envelope across workers."""
@@ -153,5 +168,6 @@ class SimResult:
             messages_discarded=traffic.discarded,
             bytes_broadcast=traffic.bytes_broadcast,
             messages_sent_dcn=traffic.sent_dcn,
+            messages_evicted=traffic.evicted,
             **kw,
         )

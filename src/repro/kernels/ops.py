@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.edge_scan import edge_scan as _edge_scan
+from repro.kernels.round_step import round_step as _round_step
 from repro.kernels.weight_update import scatter_model_slice, weight_update as _weight_update
 
 
@@ -127,8 +128,59 @@ def weight_update(
     )
 
 
+def round_deliver(
+    q_cert: jnp.ndarray,
+    q_due: jnp.ndarray,
+    q_src: jnp.ndarray,
+    q_slot: jnp.ndarray,
+    certs0: jnp.ndarray,
+    alive: jnp.ndarray,
+    credit: jnp.ndarray,
+    speed_norm: jnp.ndarray,
+    r: jnp.ndarray,
+    *,
+    eps: float,
+    tile_w: int = 128,
+    interpret: bool | None = None,
+):
+    """Fused sparse delivery + eps-gated accept + laggard credit.
+
+    Same contract as :func:`repro.kernels.ref.round_step_ref` (bool
+    ``alive`` in, bool ``take``/``active`` out); the int32 conversion
+    the TPU kernel needs at its boundary happens here.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    out = _round_step(
+        q_cert,
+        q_due,
+        q_src,
+        q_slot,
+        certs0,
+        alive.astype(jnp.int32),
+        credit,
+        speed_norm,
+        r,
+        eps=eps,
+        tile_w=tile_w,
+        interpret=interpret,
+    )
+    q_cert_new, best_cert, best_src, best_slot, take, n_arr, credit_new, active = out
+    return (
+        q_cert_new,
+        best_cert,
+        best_src,
+        best_slot,
+        take != 0,
+        n_arr,
+        credit_new,
+        active != 0,
+    )
+
+
 __all__ = [
     "edge_scan",
+    "round_deliver",
     "edge_scan_batched",
     "edge_scan_sharded",
     "weight_update",

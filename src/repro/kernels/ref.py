@@ -41,6 +41,51 @@ def weight_update_ref(
     return m_new, w
 
 
+def round_step_ref(
+    q_cert: jnp.ndarray,
+    q_due: jnp.ndarray,
+    q_src: jnp.ndarray,
+    q_slot: jnp.ndarray,
+    certs0: jnp.ndarray,
+    alive: jnp.ndarray,
+    credit: jnp.ndarray,
+    speed_norm: jnp.ndarray,
+    r: jnp.ndarray,
+    *,
+    eps: float,
+):
+    """Oracle for :func:`repro.kernels.round_step.round_step`.
+
+    Fused sparse delivery (argmin over entries due this round, ties to
+    the lowest source id — matching the dense engine's argmin), the
+    eps-gated ``accepts`` test, arrival clearing, and the laggard-credit
+    update. Also the engine's ``round_step_impl="ref"`` execution path,
+    so it takes/returns bool masks directly (``alive`` in; ``take`` /
+    ``active`` out).
+
+    Returns ``(q_cert', best_cert, best_src, best_slot, take, n_arr,
+    credit', active)``.
+    """
+    big = jnp.iinfo(jnp.int32).max
+    arr = (q_due == r) & jnp.isfinite(q_cert)
+    arr_live = jnp.where(arr & alive[:, None], q_cert, jnp.inf)
+    best_cert = jnp.min(arr_live, axis=1)
+    finite = jnp.isfinite(best_cert)
+    hit = (arr_live == best_cert[:, None]) & finite[:, None]
+    best_src = jnp.min(jnp.where(hit, q_src, big), axis=1)
+    sel = hit & (q_src == best_src[:, None])
+    best_slot = jnp.min(jnp.where(sel, q_slot, big), axis=1)
+    best_src = jnp.where(finite, best_src, 0)
+    best_slot = jnp.where(finite, best_slot, 0)
+    take = finite & (best_cert < certs0 - eps)
+    n_arr = jnp.sum(arr, axis=1).astype(jnp.int32)
+    q_cert_new = jnp.where(arr, jnp.inf, q_cert)
+    credit2 = credit + speed_norm
+    active = alive & (credit2 >= 1.0 - 1e-6)
+    credit_new = jnp.where(active, credit2 - 1.0, credit2)
+    return q_cert_new, best_cert, best_src, best_slot, take, n_arr, credit_new, active
+
+
 def margin_delta_oracle(
     model: StumpModel, xb: jnp.ndarray, t_lo: int, t_hi: int
 ) -> jnp.ndarray:

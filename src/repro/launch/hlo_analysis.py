@@ -21,6 +21,64 @@ _DTYPE_BYTES = {
 }
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
 
+
+def roofline(flops: float, bytes_accessed: float, *, peak_flops: float, hbm_bw: float) -> dict:
+    """Classic two-term roofline: arithmetic intensity vs the machine's
+    ridge point, plus the projected per-invocation floor (the larger of
+    the memory and compute terms)."""
+    intensity = flops / max(bytes_accessed, 1.0)
+    ridge = peak_flops / hbm_bw
+    return {
+        "flops": float(flops),
+        "bytes_accessed": float(bytes_accessed),
+        "arith_intensity_flops_per_byte": intensity,
+        "ridge_point_flops_per_byte": ridge,
+        "bound": "memory" if intensity < ridge else "compute",
+        "projected_us": 1e6 * max(bytes_accessed / hbm_bw, flops / peak_flops),
+    }
+
+
+def round_step_roofline(w: int, capacity: int, *, eps: float = 0.0) -> dict:
+    """Roofline accounting of the fused round-step kernel at ``(W, C)``.
+
+    ``cost_analysis()`` cannot see inside a Pallas custom-call, so this
+    lowers the bit-identical jnp reference (``kernels/ref.round_step_ref``
+    — same math, same operand set) and reads the optimized-HLO flops and
+    bytes accessed, then classifies them against the launch/mesh.py
+    per-chip constants. ``operand_bytes`` is the approximate floor the
+    fused kernel must move (four ``(W, C)`` queue leaves in, the cert
+    plane out, plus the per-worker vectors); ``fusion_overhead_x`` =
+    hlo_bytes / operand_bytes shows how far XLA's fusion of the
+    multi-pass reference sits above that floor — the gap the single-pass
+    Pallas kernel closes.
+    """
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import round_step_ref
+    from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+    qf = jax.ShapeDtypeStruct((w, capacity), jnp.float32)
+    qi = jax.ShapeDtypeStruct((w, capacity), jnp.int32)
+    vf = jax.ShapeDtypeStruct((w,), jnp.float32)
+    vb = jax.ShapeDtypeStruct((w,), jnp.bool_)
+    r = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = functools.partial(round_step_ref, eps=eps)
+    compiled = jax.jit(fn).lower(qf, qi, qi, qi, vf, vb, vf, vf, r).compile()
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    hlo_bytes = float(ca.get("bytes accessed", 0.0))
+    operand_bytes = float((5 * capacity + 11) * w * 4)
+    out = roofline(flops, hlo_bytes, peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW)
+    out["w"], out["capacity"] = w, capacity
+    out["operand_bytes"] = operand_bytes
+    out["fusion_overhead_x"] = hlo_bytes / max(operand_bytes, 1.0)
+    return out
+
 _SHAPE_RE = re.compile(
     r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]"
 )

@@ -21,9 +21,13 @@ INT_KNOBS = [
     ("REPRO_ROUNDS_PER_DISPATCH", "rounds_per_dispatch", 8),
     ("REPRO_CROSS_POD_EVERY_K", "cross_pod_every_k", 1),
     ("REPRO_CROSS_POD_TOP_K", "cross_pod_top_k", 1),
+    ("REPRO_INFLIGHT_CAPACITY", "inflight_capacity", 0),
 ]
 
-ALL_VARS = [v for v, _, _ in INT_KNOBS] + ["REPRO_GOSSIP_MODE"]
+ALL_VARS = [v for v, _, _ in INT_KNOBS] + [
+    "REPRO_GOSSIP_MODE",
+    "REPRO_ROUND_STEP_IMPL",
+]
 
 
 @pytest.fixture(autouse=True)
@@ -94,6 +98,28 @@ class TestGossipModeOverride:
             make_engine(_StubWorker(), cfg)  # ... construction is not
 
 
+class TestRoundStepImplOverride:
+    def test_unset_defaults_pallas(self):
+        assert EngineConfig().round_step_impl == "pallas"
+
+    def test_env_value_becomes_default(self, monkeypatch):
+        monkeypatch.setenv("REPRO_ROUND_STEP_IMPL", "ref")
+        assert EngineConfig().round_step_impl == "ref"
+
+    def test_empty_falls_back(self, monkeypatch):
+        monkeypatch.setenv("REPRO_ROUND_STEP_IMPL", "  ")
+        assert EngineConfig().round_step_impl == "pallas"
+
+    def test_explicit_arg_beats_env(self, monkeypatch):
+        monkeypatch.setenv("REPRO_ROUND_STEP_IMPL", "ref")
+        assert EngineConfig(round_step_impl="pallas").round_step_impl == "pallas"
+
+    def test_invalid_impl_rejected_at_engine_construction(self, monkeypatch):
+        monkeypatch.setenv("REPRO_ROUND_STEP_IMPL", "mosaic")
+        with pytest.raises(ValueError, match="round_step_impl"):
+            make_engine(_StubWorker(), EngineConfig(n_workers=2))
+
+
 class TestKnobValidation:
     """Range checks fire at engine construction for env and explicit
     values alike."""
@@ -109,6 +135,13 @@ class TestKnobValidation:
         monkeypatch.setenv("REPRO_CROSS_POD_EVERY_K", "0")
         with pytest.raises(ValueError, match="cross_pod_every_k"):
             TMSNEngine(_StubWorker(), EngineConfig(n_workers=2))
+
+    def test_inflight_capacity_zero_is_the_dense_oracle(self):
+        """Unlike the other int knobs, 0 is VALID here (dense mode);
+        only negatives are rejected."""
+        TMSNEngine(_StubWorker(), EngineConfig(n_workers=2, inflight_capacity=0))
+        with pytest.raises(ValueError, match="inflight_capacity"):
+            TMSNEngine(_StubWorker(), EngineConfig(n_workers=2, inflight_capacity=-1))
 
 
 def test_every_env_knob_is_a_config_field():

@@ -9,7 +9,12 @@ import pytest
 from repro.boosting.stumps import append_stump, empty_model
 from repro.core.engine_sharded import sharded_engine_available
 from repro.kernels import ops
-from repro.kernels.ref import edge_scan_ref, margin_delta_oracle, weight_update_ref
+from repro.kernels.ref import (
+    edge_scan_ref,
+    margin_delta_oracle,
+    round_step_ref,
+    weight_update_ref,
+)
 from repro.kernels.weight_update import scatter_model_slice
 
 
@@ -171,6 +176,68 @@ class TestWeightUpdateKernel:
         a = jnp.zeros((2, 7))
         m_new, w = ops.weight_update(xb, y, ml, ms, a, 0.0, num_bins=8, interpret=True)
         assert np.isfinite(np.asarray(w)).all()
+
+
+def _round_step_inputs(key, w, cap, fill=0.6):
+    ks = jax.random.split(key, 8)
+    q_cert = jnp.where(
+        jax.random.uniform(ks[0], (w, cap)) < fill,
+        -jax.random.uniform(ks[1], (w, cap)) - 0.01,
+        jnp.inf,
+    )
+    q_due = jax.random.randint(ks[2], (w, cap), 0, 4, dtype=jnp.int32)
+    q_src = jax.random.randint(ks[3], (w, cap), 0, w, dtype=jnp.int32)
+    q_slot = jax.random.randint(ks[4], (w, cap), 0, 3, dtype=jnp.int32)
+    certs0 = -jax.random.uniform(ks[5], (w,))
+    alive = jax.random.bernoulli(ks[6], 0.8, (w,))
+    credit = jax.random.uniform(ks[7], (w,))
+    speed = jnp.linspace(0.2, 1.0, w)
+    return q_cert, q_due, q_src, q_slot, certs0, alive, credit, speed
+
+
+class TestRoundStepKernel:
+    """Fused sparse delivery + accept + credit vs the jnp oracle. The
+    contract is BIT-identical (both paths are exact-comparison/argmin
+    logic, no accumulation), so assertions use array_equal."""
+
+    @pytest.mark.parametrize("w", [1, 7, 128, 200])
+    @pytest.mark.parametrize("cap", [1, 5, 32])
+    def test_matches_ref(self, w, cap):
+        args = _round_step_inputs(jax.random.PRNGKey(w * 37 + cap), w, cap)
+        for r in (0, 2):
+            ref = round_step_ref(*args, jnp.int32(r), eps=0.01)
+            got = ops.round_deliver(*args, jnp.int32(r), eps=0.01, interpret=True)
+            for name, a, b in zip(
+                ["q_cert", "best_cert", "best_src", "best_slot",
+                 "take", "n_arr", "credit", "active"], ref, got,
+            ):
+                assert a.dtype == b.dtype, name
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+    def test_tile_size_invariance_and_padding(self):
+        """w not a multiple of tile_w pads rows; padded rows must not
+        leak into the trimmed outputs."""
+        args = _round_step_inputs(jax.random.PRNGKey(3), 100, 4)
+        outs = [
+            ops.round_deliver(*args, jnp.int32(1), eps=0.0, tile_w=tw, interpret=True)
+            for tw in (8, 64, 256)
+        ]
+        for got in outs[1:]:
+            for a, b in zip(outs[0], got):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_empty_queue_delivers_nothing(self):
+        w, cap = 9, 3
+        q_cert = jnp.full((w, cap), jnp.inf)
+        zi = jnp.zeros((w, cap), jnp.int32)
+        out = ops.round_deliver(
+            q_cert, jnp.full((w, cap), -1, jnp.int32), zi, zi,
+            jnp.zeros((w,)), jnp.ones((w,), bool), jnp.zeros((w,)),
+            jnp.ones((w,)), jnp.int32(0), eps=0.0, interpret=True,
+        )
+        assert not bool(out[4].any())  # no take
+        assert int(out[5].sum()) == 0  # no arrivals
+        assert bool(out[7].all())  # every alive worker is credit-active
 
 
 class TestKernelScannerEquivalence:

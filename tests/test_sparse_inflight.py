@@ -1,0 +1,278 @@
+"""Sparse pending-queue in-flight state vs the dense oracle.
+
+`EngineConfig.inflight_capacity = C > 0` swaps the dense ``(W, W, D)``
+in-flight certificate buffer for a bounded per-destination ``(W, C)``
+pending queue and routes the round hot path through the fused
+``kernels/round_step.py`` kernel. The contract under test:
+
+  * at sufficient capacity (C >= peak per-destination occupancy) the
+    sparse engine is BIT-IDENTICAL to the dense oracle — certificates,
+    history, adoptions, traffic counters, fail-stop, laggard credit,
+    heterogeneous delay matrices — on the single-device engine, the
+    sharded engine (dense and gated gossip), and the pod mesh (both
+    tiers); ``messages_evicted == 0`` is the run-level witness;
+  * both `round_step_impl` values ("pallas" in interpret mode, "ref")
+    produce identical runs;
+  * at small C eviction is worst-certificate-first and exactly
+    accounted: every offered-but-not-retained candidate lands in
+    ``messages_evicted`` (discards shift from delivery time to push
+    time, so dense_discarded == sparse_discarded + sparse_evicted).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.boosting import BatchedSparrowWorker, SparrowConfig
+from repro.boosting.scanner import ScannerConfig
+from repro.core.engine import (
+    EngineConfig,
+    PendingQueue,
+    TMSNEngine,
+    _empty_queue,
+    _queue_push,
+    make_engine,
+    quantize_latency,
+)
+from repro.core.engine_sharded import sharded_engine_available
+from repro.data.splice import SpliceConfig, make_splice_like, train_test_split
+from repro.launch.mesh import make_worker_mesh
+from test_sharded_engine import ShardableToyWorker
+
+W = 16
+IMPLS = ("ref", "pallas")
+
+
+def _toy(w=W):
+    return ShardableToyWorker(
+        [1, 2, 3, 10**9] * (w // 4), [0.01 * (i + 1) for i in range(w)]
+    )
+
+
+def _run(cap, impl="ref", mesh=None, w=W, worker=None, **cfg):
+    eng = make_engine(
+        worker if worker is not None else _toy(w),
+        EngineConfig(
+            n_workers=w,
+            max_rounds=cfg.pop("max_rounds", 30),
+            inflight_capacity=cap,
+            round_step_impl=impl,
+            mesh=mesh,
+            **cfg,
+        ),
+    )
+    return eng.run()
+
+
+def _assert_identical(dense, sparse):
+    """Full-capacity contract: indistinguishable runs, zero evictions."""
+    assert sparse.final_certificates == dense.final_certificates
+    assert sparse.history == dense.history
+    assert sparse.rounds == dense.rounds
+    assert sparse.messages_sent == dense.messages_sent
+    assert sparse.messages_accepted == dense.messages_accepted
+    assert sparse.messages_discarded == dense.messages_discarded
+    assert sparse.messages_sent_dcn == dense.messages_sent_dcn
+    assert sparse.messages_evicted == 0
+    assert sparse.inflight_occupancy_peak > 0
+
+
+HET = dict(
+    speed=[1.0, 0.25] * (W // 2),
+    fail_round=[10**6] * (W - 1) + [12],
+    eps=0.005,
+)
+
+
+class TestSingleDevice:
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_uniform_delay_identical(self, impl):
+        _assert_identical(_run(0), _run(8, impl=impl))
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_heterogeneous_identical(self, impl):
+        """Delay matrix + fail-stop + laggard speeds + nonzero eps in
+        one config; capacity covers the multi-cohort occupancy."""
+        delays = quantize_latency(0.05, 0.02, 0.01, W, seed=0)
+        assert int(delays.max()) > int(delays.min())  # cohorts really mix
+        d = _run(0, delay_rounds=delays, **HET)
+        s = _run(64, impl=impl, delay_rounds=delays, **HET)
+        _assert_identical(d, s)
+
+    def test_impls_bit_identical(self):
+        a = _run(8, impl="ref")
+        b = _run(8, impl="pallas")
+        assert a.final_certificates == b.final_certificates
+        assert a.history == b.history
+
+    def test_chunked_dispatch_identical(self):
+        _assert_identical(
+            _run(0, rounds_per_dispatch=8), _run(8, rounds_per_dispatch=8)
+        )
+
+    def test_occupancy_peak_is_a_sufficient_capacity(self):
+        """Rerunning at C = reported occ peak must still be exact — the
+        peak is the measured capacity floor it claims to be."""
+        delays = quantize_latency(0.05, 0.02, 0.01, W, seed=0)
+        d = _run(0, delay_rounds=delays, **HET)
+        s = _run(64, delay_rounds=delays, **HET)
+        peak = s.inflight_occupancy_peak
+        assert 0 < peak < 64
+        _assert_identical(d, _run(peak, delay_rounds=delays, **HET))
+
+
+class TestOverflow:
+    def test_small_capacity_accounting_exact(self):
+        """C=1 at uniform delay: the global min survives worst-first
+        eviction so certificates/history still match, and every dropped
+        candidate is accounted (discards shift to push time)."""
+        d = _run(0)
+        s = _run(1)
+        assert s.final_certificates == d.final_certificates
+        assert s.history == d.history
+        assert s.messages_evicted > 0
+        assert s.messages_sent == d.messages_sent
+        assert s.messages_accepted == d.messages_accepted
+        assert s.messages_discarded + s.messages_evicted == d.messages_discarded
+
+    def test_queue_push_eviction_order_c1(self):
+        """Worst-certificate-first at C=1: the kept entry is the best
+        (cert, src) candidate; the resident entry is evicted when a
+        strictly better candidate arrives and retained otherwise."""
+        delay = jnp.ones((2, 4), jnp.int32)
+        occupied = PendingQueue(
+            cert=jnp.asarray([[-5.0], [-1.0]], jnp.float32),
+            src=jnp.asarray([[3], [3]], jnp.int32),
+            due=jnp.asarray([[7], [7]], jnp.int32),
+            slot=jnp.asarray([[0], [0]], jnp.int32),
+        )
+        # src 2 broadcasts cert -3: worse than dst0's resident -5
+        # (candidate dropped), better than dst1's resident -1 (evicted)
+        score = jnp.full((4,), jnp.inf).at[2].set(-3.0)
+        q, n_pushed, n_evicted, occ = _queue_push(
+            occupied, score, jnp.ones((2,), bool), jnp.asarray([0, 1]), delay,
+            jnp.int32(4), 8,
+        )
+        np.testing.assert_array_equal(np.asarray(q.cert[:, 0]), [-5.0, -3.0])
+        np.testing.assert_array_equal(np.asarray(q.src[:, 0]), [3, 2])
+        np.testing.assert_array_equal(np.asarray(q.due[:, 0]), [7, 5])
+        assert int(n_pushed) == 2  # offered to both destinations
+        assert int(n_evicted) == 2  # candidate@dst0 + resident@dst1
+        assert int(occ) == 2
+
+    def test_queue_push_tie_drops_higher_src(self):
+        """Equal certs: eviction keeps the lower source id — the entry
+        the dense delivery argmin would pick on a tie."""
+        q0 = _empty_queue(1, 1)._replace(
+            cert=jnp.asarray([[-2.0]], jnp.float32),
+            src=jnp.asarray([[3]], jnp.int32),
+            due=jnp.asarray([[9]], jnp.int32),
+        )
+        score = jnp.full((4,), jnp.inf).at[1].set(-2.0)
+        q, _, n_evicted, _ = _queue_push(
+            q0, score, jnp.ones((1,), bool), jnp.asarray([0]),
+            jnp.ones((1, 4), jnp.int32), jnp.int32(0), 8,
+        )
+        assert int(q.src[0, 0]) == 1 and int(n_evicted) == 1
+
+    def test_self_and_dead_rows_never_enqueue(self):
+        q0 = _empty_queue(2, 2)
+        score = jnp.asarray([-1.0, -2.0], jnp.float32)  # both broadcast
+        alive = jnp.asarray([True, False])
+        q, n_pushed, n_evicted, occ = _queue_push(
+            q0, score, alive, jnp.asarray([0, 1]),
+            jnp.ones((2, 2), jnp.int32), jnp.int32(0), 8,
+        )
+        # dst 0 hears only src 1; dst 1 is dead and hears nothing
+        assert int(jnp.sum(jnp.isfinite(q.cert[0]))) == 1
+        assert int(q.src[0, 0]) == 1
+        assert int(jnp.sum(jnp.isfinite(q.cert[1]))) == 0
+        assert int(n_pushed) == 1 and int(n_evicted) == 0 and int(occ) == 1
+
+
+@pytest.mark.skipif(
+    not sharded_engine_available(), reason="sparse sharded tests need >=2 devices"
+)
+class TestSharded:
+    @pytest.mark.parametrize("mode", ["dense", "gated"])
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_uniform_identical(self, mode, impl):
+        mesh = make_worker_mesh()
+        d = _run(0, mesh=mesh, gossip_mode=mode)
+        s = _run(64, impl=impl, mesh=mesh, gossip_mode=mode)
+        _assert_identical(d, s)
+
+    def test_heterogeneous_identical(self):
+        mesh = make_worker_mesh()
+        delays = quantize_latency(0.05, 0.02, 0.01, W, seed=0)
+        d = _run(0, mesh=mesh, gossip_mode="dense", delay_rounds=delays, **HET)
+        s = _run(64, mesh=mesh, gossip_mode="dense", delay_rounds=delays, **HET)
+        _assert_identical(d, s)
+
+    def test_sharded_sparse_matches_single_device_sparse(self):
+        a = _run(32)
+        b = _run(32, mesh=make_worker_mesh())
+        assert b.final_certificates == a.final_certificates
+        assert b.history == a.history
+        assert b.messages_evicted == a.messages_evicted == 0
+
+
+@pytest.mark.skipif(
+    len(jax.devices()) < 4 or len(jax.devices()) % 2,
+    reason="pod-mesh sparse tests need an even device count >= 4",
+)
+class TestPodMesh:
+    @pytest.mark.parametrize("mode", ["dense", "gated"])
+    @pytest.mark.parametrize("every_k", [1, 2])
+    def test_both_tiers_identical(self, mode, every_k):
+        mesh = make_worker_mesh(pods=2)
+        kw = dict(gossip_mode=mode, cross_pod_every_k=every_k)
+        d = _run(0, mesh=mesh, **kw)
+        s = _run(64, mesh=mesh, **kw)
+        _assert_identical(d, s)
+
+
+class TestSparrow:
+    @pytest.fixture(scope="class")
+    def small_data(self):
+        xb, y, _ = make_splice_like(SpliceConfig(n=20_000, d=16, num_bins=8, seed=3))
+        return train_test_split(xb, y)
+
+    def _worker(self, small_data, w):
+        xtr, ytr, _, _ = small_data
+        cfg = SparrowConfig(
+            sample_size=256,
+            capacity=16,
+            scanner=ScannerConfig(chunk_size=128, num_bins=8, gamma0=0.25),
+            n_workers=w,
+        )
+        return BatchedSparrowWorker(xtr, ytr, cfg)
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_real_worker_identical(self, small_data, impl):
+        """The full Sparrow worker (real adoptions, resamples, payload
+        ring lookups) under sparse vs dense in-flight state."""
+        w = 4
+        runs = {}
+        for cap in (0, 16):
+            runs[cap] = _run(
+                cap, impl=impl, w=w, worker=self._worker(small_data, w),
+                max_rounds=12, seed=0,
+            )
+        _assert_identical(runs[0], runs[16])
+
+    @pytest.mark.skipif(
+        not sharded_engine_available(),
+        reason="sharded Sparrow sparse test needs >=2 devices",
+    )
+    def test_real_worker_sharded_gated_identical(self, small_data):
+        w = 8
+        mesh = make_worker_mesh()
+        runs = {}
+        for cap in (0, 16):
+            runs[cap] = _run(
+                cap, w=w, worker=self._worker(small_data, w), mesh=mesh,
+                gossip_mode="gated", max_rounds=12, seed=0,
+            )
+        _assert_identical(runs[0], runs[16])
