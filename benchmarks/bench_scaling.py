@@ -211,15 +211,9 @@ class _RoundOnlyWorker:
         new = dict(state, segs=segs, fires=fires, cert=cert)
         return new, mask.astype(jnp.float32), fired
 
-    def needs_resample(self, state):
-        import jax.numpy as jnp
-
-        return jnp.zeros(state["cert"].shape, bool)
-
-    def resample_round(self, state, do):
-        import jax.numpy as jnp
-
-        return state, jnp.zeros(state["cert"].shape, jnp.float32)
+    # no resample hooks: the engines detect their absence at build time
+    # and statically drop the resample branch (repro.core.worker), so
+    # the sweep measures the lean round path
 
     def certificates(self, state):
         return state["cert"]

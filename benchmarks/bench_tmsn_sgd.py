@@ -1,13 +1,27 @@
-"""TMSN-SGD (beyond-paper): reduced-config CPU training comparison of
-synchronous data parallelism vs the TMSN strategy, plus the
-collective-bytes contrast pulled from the dry-run records when present.
+"""TMSN-SGD on the engine substrate: the transformer worker
+(``repro.core.sgd_worker``) driven by ``TMSNEngine``, measured against
+the simulator-fidelity oracle (``repro.core.tmsn_sgd.oracle_run``).
 
-Claims checked:
-  * TMSN-SGD trains (loss decreases) with W workers exchanging params
-    only at round boundaries;
-  * certificates are monotone non-increasing per worker;
-  * per-round collective bytes ~= params-size vs sync-DP's K gradient
-    all-reduces (from dryrun records, production mesh).
+Claims checked (all on a fixed tiny arch + fixed seeds, so the protocol
+metrics are deterministic across commits):
+
+  * the engine-hosted run reaches a fixed fraction of the oracle's
+    certificate descent in a guarded number of rounds
+    (``engine_rounds_to_target`` — the target is derived FROM the
+    oracle history, so it re-anchors automatically if model/optimizer
+    numerics shift);
+  * gossip stays payload-shaped: ``engine_bytes_broadcast`` counts only
+    strict-improvement broadcasts at the eval_shape-derived
+    ``payload_bytes`` (the worker defines no hand value);
+  * the engine is faithful: final certificate gap to the oracle at the
+    stop round (``oracle_cert_gap``, expected 0.0) and per-worker
+    certificate monotonicity;
+  * per-round collective bytes vs sync-DP's K gradient all-reduces on
+    the production mesh (from dry-run records, when present).
+
+Part of ``--tiny`` (the bench-smoke CI tier): guard entries for the
+two protocol metrics live in ``check_regression.GUARDED`` and WARN
+until the baseline is regenerated with them.
 """
 
 from __future__ import annotations
@@ -15,63 +29,87 @@ from __future__ import annotations
 import json
 import os
 
-import jax
+import numpy as np
 
-from repro.configs import get_config, reduced
-from repro.core.tmsn_sgd import TMSNSGDConfig, init_tmsn_state, make_tmsn_round
-from repro.data.tokens import synthetic_token_batch
-from repro.launch.steps import make_train_step
-from repro.models import init_params
-from repro.optim import AdamWConfig, init_opt_state
+from repro.core.engine import EngineConfig, TMSNEngine
+from repro.core.sgd_worker import lm_sgd_worker
+from repro.core.tmsn_sgd import TMSNSGDConfig, oracle_run
+from repro.models.config import ArchConfig
+from repro.optim import AdamWConfig
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+_ARCH = ArchConfig(
+    name="bench-tmsn-sgd",
+    arch_type="llama",
+    num_layers=2,
+    d_model=32,
+    num_heads=2,
+    num_kv_heads=2,
+    d_ff=64,
+    vocab=128,
+    remat=False,
+    compute_dtype="float32",
+)
 
 
 def run(quick: bool = False) -> list[str]:
     lines = []
-    cfg = reduced(get_config("yi-9b"))
-    opt_cfg = AdamWConfig(lr=1e-3)
-    key = jax.random.PRNGKey(0)
-    W, K, rounds = 4, 4, (4 if quick else 10)
-    b, s = 4, 64
-
-    # --- sync baseline ---
-    params = init_params(cfg, key)
-    opt = init_opt_state(params, opt_cfg)
-    step = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
-    kb = key
-    sync_losses = []
-    for i in range(rounds * K):
-        kb = jax.random.fold_in(kb, i)
-        batch = synthetic_token_batch(kb, b * W, s, cfg.vocab)
-        params, opt, m = step(params, opt, batch)
-        sync_losses.append(float(m["loss"]))
-
-    # --- TMSN-SGD ---
-    tcfg = TMSNSGDConfig(num_workers=W, local_steps=K, eps=0.0)
-    params_w, opt_w, cert_w = init_tmsn_state(cfg, opt_cfg, tcfg, key)
-    round_fn = jax.jit(make_tmsn_round(cfg, opt_cfg, tcfg), donate_argnums=(0, 1))
-    kb = jax.random.fold_in(key, 999)
-    tmsn_losses = []
-    certs_hist = []
-    for r in range(rounds):
-        kb = jax.random.fold_in(kb, r)
-        batch = synthetic_token_batch(kb, W * K * b, s, cfg.vocab)
-        batch_w = {k: v.reshape((W, K, b) + v.shape[1:]) for k, v in batch.items()}
-        params_w, opt_w, cert_w, loss = round_fn(params_w, opt_w, cert_w, batch_w)
-        tmsn_losses.append(float(loss))
-        certs_hist.append([float(c) for c in cert_w])
-
-    lines.append(f"tmsn_sgd.sync_final_loss,{sync_losses[-1]:.4f},start={sync_losses[0]:.4f}")
-    lines.append(f"tmsn_sgd.tmsn_final_loss,{tmsn_losses[-1]:.4f},start={tmsn_losses[0]:.4f}")
-    improved = tmsn_losses[-1] < tmsn_losses[0]
-    lines.append(f"tmsn_sgd.tmsn_loss_improves,{int(improved)},bool")
-    # cert monotonicity after warmup round (EMA from sentinel)
-    mono = all(
-        certs_hist[i + 1][w] <= certs_hist[i][w] + 1e-3
-        for i in range(1, len(certs_hist) - 1)
-        for w in range(W)
+    W, K = 4, 2
+    rounds = 6 if quick else 12
+    worker = lm_sgd_worker(
+        _ARCH,
+        AdamWConfig(lr=1e-2),
+        TMSNSGDConfig(local_steps=K, ema=0.8, width_coef=1.0),
+        batch_size=2,
+        seq=16,
     )
+
+    # --- oracle pass: fixes the descent target for this commit --------
+    orc = oracle_run(worker, W, rounds, eps=0.0, seed=0)
+    c0 = float(np.min(orc.history[0]))
+    c1 = float(np.min(orc.history[-1]))
+    # 75% of the oracle's descent — reachable well before the round
+    # budget, so rounds_to_target measures protocol efficiency, not the
+    # budget itself
+    target = c1 + 0.25 * (c0 - c1)
+
+    # --- engine-hosted run to that target -----------------------------
+    eng = TMSNEngine(
+        worker,
+        EngineConfig(
+            n_workers=W,
+            eps=0.0,
+            max_rounds=rounds,
+            delay_rounds=1,
+            seed=0,
+            target_certificate=target,
+        ),
+    )
+    res = eng.run()
+
+    lines.append(f"tmsn_sgd.engine_rounds_to_target,{res.rounds},target={target:.4f}")
+    lines.append(
+        f"tmsn_sgd.engine_bytes_broadcast,{res.bytes_broadcast},"
+        f"{res.messages_sent}msgs"
+    )
+    lines.append(f"tmsn_sgd.payload_bytes,{eng._payload_bytes},eval_shape-derived")
+
+    # fidelity: engine's best certificate vs the oracle's at the SAME
+    # round (bit-identical substrates => 0.0)
+    gap = abs(
+        float(np.min(res.final_certificates))
+        - float(np.min(orc.history[res.rounds - 1]))
+    )
+    lines.append(f"tmsn_sgd.oracle_cert_gap,{gap:.6f},engine-vs-oracle")
+
+    per_worker: dict[int, float] = {}
+    mono = True
+    for _, wid, cert in res.history:
+        prev = per_worker.get(wid)
+        if prev is not None and cert > prev + 1e-7:
+            mono = False
+        per_worker[wid] = cert
     lines.append(f"tmsn_sgd.certs_monotone,{int(mono)},bool")
 
     # --- production-mesh collective contrast (from dry-run records) ---

@@ -27,7 +27,7 @@ import time
 #: the --tiny selection: benches that finish in ~seconds on a 2-core
 #: runner (still real measurements — stopping rule, kernel microbench,
 #: protocol counters) so every push gets a comparable JSON artifact
-TINY_BENCHES = ["stopping", "kernels", "protocol"]
+TINY_BENCHES = ["stopping", "kernels", "protocol", "tmsn_sgd"]
 
 
 def _git_sha() -> str | None:

@@ -1,63 +1,106 @@
-"""TMSN-SGD on a small LM: 4 worker groups train with independent local
-steps and exchange parameters only when one's certificate beats the
-others by eps — the paper's protocol as a neural-net distribution
-strategy (DESIGN.md §3, level 3). Compares against synchronous DP on
-identical data.
+"""TMSN-SGD on a small LM, hosted by the gossip engine: transformer
+workers run K local AdamW steps per round and broadcast parameters only
+on strict certificate improvement — the paper's protocol as a
+neural-net distribution strategy, driven end-to-end by the same
+``TMSNEngine`` that runs the boosting workers (laggards, failures, and
+round latencies included).
 
-  PYTHONPATH=src python examples/tmsn_sgd_lm.py [--rounds 10]
+  PYTHONPATH=src python examples/tmsn_sgd_lm.py [--rounds 12] [--laggard]
+
+On a multi-device host (or XLA_FLAGS=--xla_force_host_platform_device_count=8)
+add ``--mesh`` to run the identical protocol through the shard-mapped
+``ShardedTMSNEngine`` instead — same final certificates, real
+collectives.
 """
 
 import argparse
 import time
 
-import jax
+import numpy as np
 
-from repro.configs import get_config, reduced
-from repro.core.tmsn_sgd import TMSNSGDConfig, init_tmsn_state, make_tmsn_round
-from repro.data.tokens import synthetic_token_batch
-from repro.launch.steps import make_train_step
-from repro.models import init_params
-from repro.optim import AdamWConfig, init_opt_state
+from repro.core.engine import EngineConfig, make_engine
+from repro.core.sgd_worker import lm_sgd_worker
+from repro.core.tmsn_sgd import TMSNSGDConfig, oracle_run
+from repro.models.config import ArchConfig
+from repro.optim import AdamWConfig
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument(
+        "--laggard",
+        action="store_true",
+        help="run worker 0 at quarter speed (one segment every 4 rounds)",
+    )
+    ap.add_argument(
+        "--mesh",
+        action="store_true",
+        help="shard the worker axis over all visible devices",
+    )
     args = ap.parse_args()
 
-    cfg = reduced(get_config("yi-9b"))
-    opt_cfg = AdamWConfig(lr=1e-3)
-    W, K, b, s = args.workers, args.local_steps, 4, 64
-    key = jax.random.PRNGKey(0)
+    arch = ArchConfig(
+        name="example-lm",
+        arch_type="llama",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=128,
+        vocab=256,
+        remat=False,
+        compute_dtype="float32",
+    )
+    W, K = args.workers, args.local_steps
+    worker = lm_sgd_worker(
+        arch,
+        AdamWConfig(lr=1e-2),
+        TMSNSGDConfig(local_steps=K, ema=0.9, width_coef=1.0),
+        batch_size=4,
+        seq=32,
+    )
 
-    # sync baseline on the same token stream
-    params = init_params(cfg, key)
-    opt = init_opt_state(params, opt_cfg)
-    sync = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
-    kb = key
-    for i in range(args.rounds * K):
-        kb = jax.random.fold_in(kb, i)
-        params, opt, m = sync(params, opt, synthetic_token_batch(kb, b * W, s, cfg.vocab))
-    print(f"[sync-DP ] final loss {float(m['loss']):.4f} "
-          f"({args.rounds * K} steps, {W * K * args.rounds} gradient all-reduces)")
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_worker_mesh
 
-    # TMSN-SGD
-    tcfg = TMSNSGDConfig(num_workers=W, local_steps=K, eps=0.01)
-    params_w, opt_w, cert_w = init_tmsn_state(cfg, opt_cfg, tcfg, key)
-    round_fn = jax.jit(make_tmsn_round(cfg, opt_cfg, tcfg), donate_argnums=(0, 1))
-    kb = jax.random.fold_in(key, 10_000)
+        mesh = make_worker_mesh()
+    speed = [0.25] + [1.0] * (W - 1) if args.laggard else None
+    cfg = EngineConfig(
+        n_workers=W,
+        eps=0.0,
+        max_rounds=args.rounds,
+        delay_rounds=1,
+        speed=speed,
+        seed=0,
+        mesh=mesh,
+    )
+    eng = make_engine(worker, cfg)
     t0 = time.time()
-    for r in range(args.rounds):
-        kb = jax.random.fold_in(kb, r)
-        batch = synthetic_token_batch(kb, W * K * b, s, cfg.vocab)
-        batch_w = {k: v.reshape((W, K, b) + v.shape[1:]) for k, v in batch.items()}
-        params_w, opt_w, cert_w, loss = round_fn(params_w, opt_w, cert_w, batch_w)
-        print(f"[TMSN-SGD] round {r}: loss {float(loss):.4f} "
-              f"certs {[round(float(c), 3) for c in cert_w]}")
-    print(f"[TMSN-SGD] {args.rounds} param exchanges instead of "
-          f"{args.rounds * K} gradient all-reduces ({time.time()-t0:.1f}s)")
+    res = eng.run()
+    dt = time.time() - t0
+
+    certs = np.asarray(res.final_certificates)
+    print(
+        f"[TMSN-SGD] {res.rounds} rounds, {W} workers x {K} local steps"
+        f"{' (worker 0 at 1/4 speed)' if args.laggard else ''}"
+        f"{f' on a {cfg.mesh.size}-device mesh' if mesh is not None else ''}"
+    )
+    print(f"[TMSN-SGD] final certificates {[round(float(c), 4) for c in certs]}")
+    print(
+        f"[TMSN-SGD] {res.messages_sent} parameter broadcasts "
+        f"({res.bytes_broadcast} bytes at {res.bytes_broadcast // max(res.messages_sent, 1)}"
+        f" B/msg) instead of {res.rounds * K} gradient all-reduces ({dt:.1f}s)"
+    )
+
+    if not args.laggard and mesh is None:
+        # uniform speed + delay 1 is the oracle-exact regime — show it
+        orc = oracle_run(worker, W, args.rounds, eps=0.0, seed=0)
+        gap = float(np.max(np.abs(certs - orc.certs)))
+        print(f"[oracle  ] synchronous-exchange certificates match: gap {gap:.2e}")
 
 
 if __name__ == "__main__":

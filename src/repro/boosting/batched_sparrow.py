@@ -51,6 +51,7 @@ from repro.boosting.sparrow import (
     draw_sample,
 )
 from repro.core.ess import effective_sample_size
+from repro.core.worker import masked_rows
 from repro.boosting.stumps import (
     StumpModel,
     alpha_from_gamma,
@@ -87,14 +88,9 @@ class BatchedSparrowState(NamedTuple):
     feat_mask: jnp.ndarray  # (W, d) bool — feature ownership (constant)
 
 
-def _bwhere(cond: jnp.ndarray, new, old):
-    """Per-worker select over a stacked pytree: broadcast the (W,) cond
-    over each leaf's trailing dims."""
-    return jax.tree_util.tree_map(
-        lambda a, b: jnp.where(cond.reshape(cond.shape + (1,) * (a.ndim - 1)), a, b),
-        new,
-        old,
-    )
+# per-worker select over a stacked pytree — the contract-level helper
+# from repro.core.worker, kept under its historical local name
+_bwhere = masked_rows
 
 
 def common_prefix_len(a: StumpModel, b: StumpModel) -> jnp.ndarray:
@@ -112,7 +108,8 @@ def common_prefix_len(a: StumpModel, b: StumpModel) -> jnp.ndarray:
 
 
 class BatchedSparrowWorker(SparrowWorkerBase):
-    """Implements the engine's BatchedTMSNWorker protocol for Sparrow."""
+    """Implements :class:`repro.core.worker.BatchedTMSNWorker` for
+    Sparrow — the boosting instantiation of the worker contract."""
 
     # ----- engine protocol hooks --------------------------------------
     def init_batch(self, n_workers: int, seed: int) -> BatchedSparrowState:

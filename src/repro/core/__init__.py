@@ -19,8 +19,15 @@ from repro.core.simulator import (
     WorkerSpec,
     TMSNSimulator,
 )
-from repro.core.engine import (
+from repro.core.worker import (
     BatchedTMSNWorker,
+    TMSNWorker,
+    export_payload_rows,
+    has_resample_hooks,
+    payload_bytes_from_export,
+    resolve_payload_bytes,
+)
+from repro.core.engine import (
     EngineConfig,
     TMSNEngine,
     make_engine,
@@ -42,7 +49,12 @@ __all__ = [
     "TMSNSimulator",
     "SimResult",
     "TrafficCounters",
+    "TMSNWorker",
     "BatchedTMSNWorker",
+    "export_payload_rows",
+    "has_resample_hooks",
+    "payload_bytes_from_export",
+    "resolve_payload_bytes",
     "EngineConfig",
     "TMSNEngine",
     "ShardedTMSNEngine",

@@ -74,6 +74,12 @@ axis (DCN) every :attr:`EngineConfig.cross_pod_every_k` rounds —
 bit-identical to the flat engine at ``k=1`` under uniform delay, a
 benchmark-measured approximation beyond.
 
+The worker contract this engine drives —
+:class:`repro.core.worker.BatchedTMSNWorker` — lives in
+:mod:`repro.core.worker` (imported here for backward compatibility);
+this module only *consumes* it, through the optional-hook helpers in
+that module, and never references any concrete worker type.
+
 Sharding contract: everything in this module is written to be
 shardable over the worker axis — every per-worker quantity (including
 per-worker constants like feature-ownership masks) lives in the state
@@ -88,7 +94,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Any, NamedTuple, Protocol
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -96,6 +102,11 @@ import numpy as np
 
 from repro.core.protocol import accepts, improves
 from repro.core.result import SimResult, TrafficCounters
+from repro.core.worker import (
+    BatchedTMSNWorker,
+    has_resample_hooks,
+    resolve_payload_bytes,
+)
 
 
 def _env_int(name: str, default: int) -> int:
@@ -117,68 +128,6 @@ def _env_str(name: str, default: str) -> str:
     gossip modes whether they came from the env or an explicit arg)."""
     raw = os.environ.get(name, "").strip()
     return raw if raw else default
-
-
-class BatchedTMSNWorker(Protocol):
-    """Duck-typed batched worker plugged into the engine.
-
-    All methods must be pure and traceable (the engine jits the whole
-    round step, worker computation included). States are stacked
-    pytrees with a leading worker axis; certificates are ``(W,)``
-    float32 arrays (lower = better).
-
-    Certificates must be monotone non-increasing over rounds (a scan
-    may only keep or lower a worker's certificate, and adoption is
-    accept-gated so it only lowers it). The protocol itself only
-    compares instantaneous values, but the sharded engine's gated
-    gossip mode leans on monotonicity for its gated==dense equivalence
-    under uniform delay — see :mod:`repro.core.engine_sharded`.
-    """
-
-    def init_batch(self, n_workers: int, seed: int) -> Any: ...
-
-    def scan_round(self, state: Any, mask: jnp.ndarray) -> tuple[Any, jnp.ndarray, jnp.ndarray]:
-        """Run one segment for every worker where ``mask`` is True.
-
-        Returns (new_state, cost (W,), fired (W,)); masked-out workers
-        must come back unchanged with zero cost.
-        """
-        ...
-
-    def needs_resample(self, state: Any) -> jnp.ndarray:
-        """(W,) bool — workers whose next segment is a resample (may be
-        all-False forever for workers without a sampling phase)."""
-        ...
-
-    def resample_round(self, state: Any, do: jnp.ndarray) -> tuple[Any, jnp.ndarray]:
-        """Spend the segment of every worker where ``do`` on a resample;
-        returns (new_state, cost (W,))."""
-        ...
-
-    def certificates(self, state: Any) -> jnp.ndarray: ...
-
-    def export_models(self, state: Any) -> Any:
-        """Stacked model pytree with leading worker axis (the broadcast
-        payload; must be cheap — no recomputation).
-
-        Workers may additionally implement the optional
-        ``export_payload_rows(state, rows) -> models`` hook: gather just
-        ``rows`` (a (k,) int array of worker-axis indices) of the
-        payload. The sharded engine's candidate-selecting tiers use it
-        — gated gossip ships only the top-k locally-improved candidate
-        models instead of the full stack, and the pod-mesh cross-pod
-        tier ships the top-k pending candidates per flush; absent the
-        hook both fall back to indexing ``export_models``."""
-        ...
-
-    def adopt_batch(
-        self, state: Any, models: Any, certs: jnp.ndarray, take: jnp.ndarray
-    ) -> tuple[Any, jnp.ndarray]:
-        """Adopt ``models[i]``/``certs[i]`` wherever ``take[i]``;
-        returns (new_state, cost (W,))."""
-        ...
-
-    def payload_bytes(self) -> int: ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -499,6 +448,14 @@ class TMSNEngine:
         #: chunk size plus at most one remainder length per run)
         self._chunks: dict[int, Any] = {}
 
+        #: workers without a sampling phase omit the resample hooks and
+        #: the round step statically drops the whole resample branch
+        self._has_resample = has_resample_hooks(worker)
+        #: traffic-accounting payload size: the worker's own
+        #: payload_bytes() when defined, else derived from the exported
+        #: model pytree via jax.eval_shape (cannot drift from reality)
+        self._payload_bytes = resolve_payload_bytes(worker, w, config.seed)
+
     # ------------------------------------------------------------------
     # dispatch chunking: K rounds per jitted call via lax.scan
     # ------------------------------------------------------------------
@@ -701,14 +658,20 @@ class TMSNEngine:
         )
 
         # --- 3. one segment per live, credit-covered worker ---------------
-        need = self.worker.needs_resample(wstate) & active
-        wstate, resample_cost = jax.lax.cond(
-            jnp.any(need),
-            lambda op: self.worker.resample_round(op[0], op[1]),
-            lambda op: (op[0], jnp.zeros((w,), jnp.float32)),
-            (wstate, need),
-        )
-        scan_mask = active & ~need
+        # (workers without the optional resample hooks skip this branch
+        # statically — see repro.core.worker.has_resample_hooks)
+        if self._has_resample:
+            need = self.worker.needs_resample(wstate) & active
+            wstate, resample_cost = jax.lax.cond(
+                jnp.any(need),
+                lambda op: self.worker.resample_round(op[0], op[1]),
+                lambda op: (op[0], jnp.zeros((w,), jnp.float32)),
+                (wstate, need),
+            )
+            scan_mask = active & ~need
+        else:
+            resample_cost = jnp.zeros((w,), jnp.float32)
+            scan_mask = active
         certs_pre = self.worker.certificates(wstate)
         wstate, scan_cost, fired = self.worker.scan_round(wstate, scan_mask)
         certs = self.worker.certificates(wstate)
@@ -841,7 +804,7 @@ class TMSNEngine:
             sent=np.asarray(state.sent),
             accepted=np.asarray(state.accepted),
             discarded=np.asarray(state.discarded),
-            payload_bytes=self.worker.payload_bytes(),
+            payload_bytes=self._payload_bytes,
             sent_dcn=np.asarray(state.sent_dcn),
             evicted=np.asarray(state.evicted),
         )

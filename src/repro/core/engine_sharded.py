@@ -113,7 +113,7 @@ fail-stop masks and laggard compute credit. ``tests/test_sharded_engine.py``
 pins this on 8 forced host devices.
 
 Worker contract addition: inside the shard-mapped step the
-:class:`~repro.core.engine.BatchedTMSNWorker` methods see *local*
+:class:`~repro.core.worker.BatchedTMSNWorker` methods see *local*
 shards (leading axis ``W_local``, not ``W``). Workers must therefore
 carry every per-worker constant (feature-ownership masks, worker ids
 embedded in payloads, ...) in the state pytree — sharded along with it
@@ -133,7 +133,6 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.engine import (
-    BatchedTMSNWorker,
     EngineConfig,
     EngineState,
     RoundInfo,
@@ -141,6 +140,7 @@ from repro.core.engine import (
     _queue_push,
 )
 from repro.core.protocol import accepts, improves
+from repro.core.worker import BatchedTMSNWorker, export_payload_rows
 
 
 class _ShardConsts(NamedTuple):
@@ -287,7 +287,7 @@ class ShardedTMSNEngine(TMSNEngine):
         return state
 
     def _gossip_split(self) -> tuple[int, int]:
-        p = self.worker.payload_bytes()
+        p = self._payload_bytes
         w = self.config.n_workers
         w_tier = w // self._n_pods  # workers gathered by the intra tier
         if self.config.gossip_mode == "gated":
@@ -335,15 +335,11 @@ class ShardedTMSNEngine(TMSNEngine):
         return rows, jnp.isfinite(score[rows])
 
     def _export_rows(self, wstate, rows: jnp.ndarray):
-        """Candidate payloads for ``rows`` via the worker's optional
-        ``export_payload_rows`` hook (falls back to indexing the full
-        exported stack)."""
-        export_rows = getattr(self.worker, "export_payload_rows", None)
-        if export_rows is not None:
-            return export_rows(wstate, rows)
-        return jax.tree_util.tree_map(
-            lambda a: a[rows], self.worker.export_models(wstate)
-        )
+        """Candidate payloads for ``rows`` — the shared optional-hook
+        helper from :mod:`repro.core.worker` (the worker's
+        ``export_payload_rows`` when defined, else the one indexing
+        fallback both candidate-selecting tiers share)."""
+        return export_payload_rows(self.worker, wstate, rows)
 
     def _sharded_round_step(
         self, state: EngineState, consts: _ShardConsts
@@ -414,14 +410,20 @@ class ShardedTMSNEngine(TMSNEngine):
             active = alive & (credit >= 1.0 - 1e-6)
             credit = jnp.where(active, credit - 1.0, credit)
 
-        need = self.worker.needs_resample(wstate) & active
-        wstate, resample_cost = jax.lax.cond(
-            jnp.any(need),
-            lambda op: self.worker.resample_round(op[0], op[1]),
-            lambda op: (op[0], jnp.zeros((wl,), jnp.float32)),
-            (wstate, need),
-        )
-        scan_mask = active & ~need
+        # optional resample hooks: statically absent for workers
+        # without a sampling phase (repro.core.worker.has_resample_hooks)
+        if self._has_resample:
+            need = self.worker.needs_resample(wstate) & active
+            wstate, resample_cost = jax.lax.cond(
+                jnp.any(need),
+                lambda op: self.worker.resample_round(op[0], op[1]),
+                lambda op: (op[0], jnp.zeros((wl,), jnp.float32)),
+                (wstate, need),
+            )
+            scan_mask = active & ~need
+        else:
+            resample_cost = jnp.zeros((wl,), jnp.float32)
+            scan_mask = active
         certs_pre = self.worker.certificates(wstate)
         wstate, scan_cost, fired = self.worker.scan_round(wstate, scan_mask)
         certs = self.worker.certificates(wstate)

@@ -1,0 +1,223 @@
+"""TMSN-SGD as a first-class engine worker: transformer + AdamW on the
+gossip substrate.
+
+:class:`BatchedSGDWorker` adapts any ``(init_fn, loss_fn, batch_fn,
+AdamWConfig)`` quadruple to the
+:class:`repro.core.worker.BatchedTMSNWorker` contract, so the whole
+substrate chain — ``TMSNEngine``, ``ShardedTMSNEngine``, dense/gated
+gossip, the pod mesh, the sparse in-flight state — runs SGD learners
+unchanged. This is the paper's async setting applied to data-parallel
+LM training: gradients never cross the wire, only improved parameter
+snapshots do.
+
+Mapping onto the paper's concepts:
+
+  one segment        -> ``local_steps`` (K) AdamW steps on the worker's
+                        own synthetic batch stream (per-worker PRNG keys
+                        carried IN the state, per the sharding contract)
+  certificate L      -> running minimum of an EMA loss estimate plus a
+                        concentration width (``std of the K step losses
+                        / sqrt(K)``, scaled by ``width_coef``). The raw
+                        EMA estimate is *not* monotone — batches are
+                        noisy — so the state carries both: ``est`` (the
+                        honest estimator) and ``cert = min(cert, est)``
+                        (the monotone envelope the protocol requires).
+                        ``fired`` is a strict decrease of the envelope.
+  broadcast payload  -> the params pytree only. Optimizer moments stay
+                        local: shipping them would double the wire
+                        footprint, and an adopter continuing with its
+                        own moments is the standard model-merging
+                        choice. On adoption both ``cert`` and ``est``
+                        restart at the incoming certificate (the SGD
+                        analogue of Sparrow replacing (H, L)).
+  cost units         -> K (local optimizer steps per segment); adoption
+                        is charged zero (a parameter copy, no examples).
+
+The worker deliberately omits every optional hook: no
+``needs_resample``/``resample_round`` (engines drop the resample branch
+statically), no ``payload_bytes`` (engines derive it from the exported
+pytree via ``jax.eval_shape``), no ``export_payload_rows`` (gated and
+cross-pod tiers use the shared indexing fallback) — it is the
+conformance fixture for the contract's default machinery as much as a
+trainer (``tests/test_worker_contract.py``).
+
+The simulator-fidelity oracle lives in :mod:`repro.core.tmsn_sgd`
+(``make_oracle_round`` / ``oracle_run``); the engine-hosted run is
+pinned against it on the uniform-speed / zero-latency config.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.worker import masked_rows
+from repro.optim import AdamWConfig, apply_updates, init_opt_state
+
+__all__ = ["BatchedSGDState", "BatchedSGDWorker", "lm_sgd_worker"]
+
+
+class BatchedSGDState(NamedTuple):
+    """Stacked per-worker SGD state; every leaf has a leading (W,) axis
+    (``opt``'s per-worker ``step`` scalar becomes a (W,) vector)."""
+
+    params: Any  # model params, leaves (W, ...)
+    opt: Any  # AdamW state {"mu", "nu", "step"}, leaves (W, ...)
+    cert: jnp.ndarray  # (W,) f32 — monotone envelope (running min of est)
+    est: jnp.ndarray  # (W,) f32 — raw EMA estimate (+inf before 1st segment)
+    key: jax.Array  # (W, 2) per-worker batch-stream PRNG keys
+
+
+class BatchedSGDWorker:
+    """K local AdamW steps per segment under the worker contract.
+
+    ``init_fn(key) -> params`` builds one (unbatched) model;
+    ``loss_fn(params, batch) -> (loss, aux)`` is the per-step objective;
+    ``batch_fn(key) -> batch`` draws one step's batch pytree (leaves
+    ``(batch, ...)``) — it must be traceable, the stream advances inside
+    the jitted round. ``local_steps``, ``ema``, ``width_coef`` and
+    ``unroll`` come from :class:`repro.core.tmsn_sgd.TMSNSGDConfig`
+    (its ``num_workers``/``eps`` only feed the legacy synchronous path:
+    the engine decides W via ``EngineConfig.n_workers``, and eps gates
+    acceptance in the engine, never inside the worker).
+    """
+
+    def __init__(
+        self,
+        init_fn: Callable[[jax.Array], Any],
+        loss_fn: Callable[[Any, Any], tuple[jnp.ndarray, Any]],
+        batch_fn: Callable[[jax.Array], Any],
+        opt_cfg: AdamWConfig,
+        sgd_cfg: "Any" = None,
+    ) -> None:
+        # deferred import: tmsn_sgd pulls the model zoo, this module
+        # must stay importable from repro.core without it
+        from repro.core.tmsn_sgd import TMSNSGDConfig
+
+        self._init_fn = init_fn
+        self._loss_fn = loss_fn
+        self._batch_fn = batch_fn
+        self._opt_cfg = opt_cfg
+        self.cfg = TMSNSGDConfig() if sgd_cfg is None else sgd_cfg
+        if self.cfg.local_steps < 1:
+            raise ValueError(f"local_steps must be >= 1, got {self.cfg.local_steps}")
+
+    # ----- contract: required ------------------------------------------
+    def init_batch(self, n_workers: int, seed: int) -> BatchedSGDState:
+        base = jax.random.PRNGKey(seed)
+        params = self._init_fn(base)
+        opt = init_opt_state(params, self._opt_cfg)
+
+        def tile(a):
+            return jnp.broadcast_to(a[None], (n_workers,) + a.shape)
+
+        # every worker starts from the SAME H_0 (paper §2); divergence
+        # comes from the independent per-worker batch streams below
+        keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
+            jnp.arange(1, n_workers + 1)
+        )
+        return BatchedSGDState(
+            params=jax.tree_util.tree_map(tile, params),
+            opt=jax.tree_util.tree_map(tile, opt),
+            cert=jnp.full((n_workers,), jnp.inf, jnp.float32),
+            est=jnp.full((n_workers,), jnp.inf, jnp.float32),
+            key=keys,
+        )
+
+    def certificates(self, state: BatchedSGDState) -> jnp.ndarray:
+        return state.cert
+
+    def export_models(self, state: BatchedSGDState) -> Any:
+        return state.params
+
+    def scan_round(
+        self, state: BatchedSGDState, mask: jnp.ndarray
+    ) -> tuple[BatchedSGDState, jnp.ndarray, jnp.ndarray]:
+        cfg = self.cfg
+        k_steps = int(cfg.local_steps)
+
+        def segment(params, opt, key):
+            key, sub = jax.random.split(key)
+            batches = jax.vmap(self._batch_fn)(jax.random.split(sub, k_steps))
+
+            def one_step(carry, batch):
+                p, o = carry
+                (loss, _aux), grads = jax.value_and_grad(
+                    self._loss_fn, has_aux=True
+                )(p, batch)
+                p, o = apply_updates(p, grads, o, self._opt_cfg)
+                return (p, o), loss
+
+            (params, opt), losses = jax.lax.scan(
+                one_step, (params, opt), batches,
+                unroll=k_steps if cfg.unroll else 1,
+            )
+            return params, opt, losses, key
+
+        params, opt, losses, key = jax.vmap(segment)(
+            state.params, state.opt, state.key
+        )
+        mean = jnp.mean(losses, axis=1)
+        width = cfg.width_coef * jnp.std(losses, axis=1) / jnp.sqrt(
+            jnp.asarray(k_steps, jnp.float32)
+        )
+        sample = (mean + width).astype(jnp.float32)
+        # EMA warm-start: the first observation IS the estimate (an inf
+        # or giant sentinel would poison the average for ~1/(1-ema)
+        # rounds); afterwards the usual geometric update
+        est = jnp.where(
+            jnp.isfinite(state.est),
+            cfg.ema * state.est + (1.0 - cfg.ema) * sample,
+            sample,
+        )
+        cert = jnp.minimum(state.cert, est)  # monotone envelope
+        new = BatchedSGDState(params=params, opt=opt, cert=cert, est=est, key=key)
+        # masked-out workers come back bitwise unchanged (keys included:
+        # their batch streams must not advance on skipped rounds)
+        new = masked_rows(mask, new, state)
+        cost = mask.astype(jnp.float32) * float(k_steps)
+        fired = mask & (new.cert < state.cert)
+        return new, cost, fired
+
+    def adopt_batch(
+        self,
+        state: BatchedSGDState,
+        models: Any,
+        certs: jnp.ndarray,
+        take: jnp.ndarray,
+    ) -> tuple[BatchedSGDState, jnp.ndarray]:
+        certs = jnp.asarray(certs, jnp.float32)
+        new = state._replace(
+            params=masked_rows(take, models, state.params),
+            # restart both the envelope and the estimator at the adopted
+            # certificate — acceptance is eps-gated by the engine, so
+            # this only ever lowers cert (monotonicity holds)
+            cert=jnp.where(take, certs, state.cert),
+            est=jnp.where(take, certs, state.est),
+        )
+        return new, jnp.zeros_like(state.cert)
+
+
+def lm_sgd_worker(
+    arch_cfg: Any,
+    opt_cfg: AdamWConfig,
+    sgd_cfg: Any,
+    batch_size: int = 4,
+    seq: int = 64,
+) -> BatchedSGDWorker:
+    """The concrete instantiation: a ``repro.models`` transformer with
+    AdamW on the synthetic token stream. Each worker draws its own
+    batches from its state-carried PRNG key, standing in for the
+    paper's independent per-machine data shards."""
+    from repro.data.tokens import synthetic_token_batch
+    from repro.models import init_params, loss_fn
+
+    return BatchedSGDWorker(
+        init_fn=lambda key: init_params(arch_cfg, key),
+        loss_fn=lambda params, batch: loss_fn(params, arch_cfg, batch),
+        batch_fn=lambda key: synthetic_token_batch(key, batch_size, seq, arch_cfg.vocab),
+        opt_cfg=opt_cfg,
+        sgd_cfg=sgd_cfg,
+    )

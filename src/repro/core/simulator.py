@@ -22,49 +22,20 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Callable, Protocol, Sequence
+from typing import Any, Callable, Sequence
 
 from repro.core.protocol import accepts, improves
 from repro.core.result import SimResult, TrafficCounters
+from repro.core.worker import TMSNWorker
 
 __all__ = [
-    "TMSNWorker",
+    "TMSNWorker",  # re-exported; the worker protocols live in repro.core.worker
     "WorkerSpec",
     "SimulatorConfig",
     "SimResult",  # re-exported; lives in repro.core.result
     "TMSNSimulator",
     "run_bsp_baseline",
 ]
-
-
-class TMSNWorker(Protocol):
-    """Duck-typed worker plugged into the simulator.
-
-    State objects are opaque to the simulator; certificates are floats
-    (lower = better).
-    """
-
-    def init_state(self, worker_id: int, seed: int) -> Any: ...
-
-    def run_segment(self, state: Any) -> tuple[Any, float, bool]:
-        """Run one scheduling quantum.
-
-        Returns (new_state, cost_units, fired) where ``cost_units`` is
-        the simulated compute cost of the segment (examples scanned,
-        including any sampling pass) and ``fired`` is True if the worker
-        found a better model during this segment.
-        """
-        ...
-
-    def certificate(self, state: Any) -> float: ...
-
-    def export_model(self, state: Any) -> Any: ...
-
-    def adopt(self, state: Any, model: Any, certificate: float) -> Any:
-        """Interrupt: replace (H, L) with the incoming pair."""
-        ...
-
-    def payload_bytes(self, model: Any) -> int: ...
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,23 +1,33 @@
-"""TMSN-SGD: the paper's protocol as a distributed *training strategy*
-for the transformer zoo (DESIGN.md §3, fidelity level 3).
+"""TMSN-SGD: shared config, the simulator-fidelity oracle, and the
+legacy synchronous analysis round.
 
-Mapping of the paper's concepts onto SPMD/TPU:
+The *engine-hosted* TMSN-SGD worker lives in
+:mod:`repro.core.sgd_worker` (``BatchedSGDWorker`` /
+``lm_sgd_worker``): it implements the
+:class:`repro.core.worker.BatchedTMSNWorker` contract, so the full
+substrate chain — ``TMSNEngine``, ``ShardedTMSNEngine``, gated gossip,
+the pod mesh, the sparse in-flight state — drives SGD learners with no
+SGD-specific engine code. What remains here:
 
-  worker            -> a worker *group*: a slice of the mesh along the
-                       worker axis ("data" single-pod, "pod" multi-pod)
-  independent search-> K local optimizer steps on the group's own batch
-                       shard (no gradient all-reduce across groups)
-  certificate L     -> EMA of training loss + a concentration width
-                       (std of the K step losses / sqrt(K); the honest
-                       analogue of the paper's bound — DESIGN.md notes
-                       that a training-loss EMA is an estimator, not a
-                       sound bound)
-  broadcast (H,L)   -> one conditional one-hot parameter exchange per
-                       round: the argmin-certificate group's params are
-                       gathered (XLA lowers the dynamic index over the
-                       worker-sharded axis to a collective) and adopted
-                       only by groups whose certificate it beats by eps
-  accept/reject     -> repro.core.protocol.accepts, unchanged
+  * :class:`TMSNSGDConfig` — the knob set both paths share
+    (``local_steps`` K, certificate ``ema`` / ``width_coef``,
+    ``unroll``; ``num_workers`` / ``eps`` feed only the legacy round —
+    the engines own W and the acceptance gate);
+  * :func:`make_oracle_round` / :func:`oracle_run` — a dense,
+    delay-1, uniform-speed synchronous exchange built on any batched
+    worker's own methods, mirroring the engine's round order exactly
+    (deliver -> adopt -> segment -> broadcast-on-strict-improvement).
+    Under that config the engine's in-flight buffer holds at most one
+    round of messages, so carrying last round's (certs, models) between
+    iterations IS the buffer — the oracle is the worker-level analogue
+    of the event simulator, and ``tests/test_worker_contract.py`` pins
+    both engines against it;
+  * the legacy fused round (:func:`make_tmsn_round` /
+    :func:`init_tmsn_state` / :func:`tmsn_batch_specs`) — a
+    barrier-synchronous one-hot exchange kept for the launch/dry-run
+    cost analysis (``launch/dryrun.py``, ``launch/train.py``), where
+    the object of study is the per-round collective footprint, not the
+    asynchronous protocol.
 
 Collective cost per round: ONE parameter broadcast over the worker axis
 instead of K gradient all-reduces — this is precisely the paper's
@@ -32,7 +42,10 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.protocol import accepts, improves
+from repro.core.worker import has_resample_hooks
 from repro.models.config import ArchConfig
 from repro.models import loss_fn
 from repro.optim import AdamWConfig, apply_updates
@@ -46,6 +59,121 @@ class TMSNSGDConfig:
     ema: float = 0.9
     width_coef: float = 1.0  # certificate confidence-width multiplier
     unroll: bool = False  # unroll the K-step scan (dry-run cost analysis)
+
+
+# ---------------------------------------------------------------------------
+# Simulator-fidelity oracle: dense delay-1 uniform-speed exchange over any
+# batched worker. tests/test_worker_contract.py pins both engines against it.
+# ---------------------------------------------------------------------------
+
+
+def make_oracle_round(worker: Any, eps: float = 0.0) -> Callable:
+    """Returns ``round(state, bcast_certs, bcast_models) -> (state,
+    certs, bcast_certs, bcast_models)`` — one synchronous round of the
+    dense, delay-1, uniform-speed, no-failure protocol over ``worker``
+    (any :class:`repro.core.worker.BatchedTMSNWorker`).
+
+    ``bcast_certs`` (W,) carries last round's broadcast certificates
+    (+inf where a worker did not fire) and ``bcast_models`` the matching
+    export — together they are the engine's one-deep in-flight buffer +
+    snapshot ring collapsed to the only slot that can be occupied under
+    this config. Stage order and tie-breaks mirror
+    ``TMSNEngine._round_step`` exactly:
+
+      1. deliver: per-destination argmin over sources (self excluded,
+         ties to the LOWEST source id — ``jnp.argmin``'s first-minimum,
+         same as the engine's), accept iff the incoming certificate
+         beats the local one by more than ``eps``;
+      2. adopt_batch — called unconditionally: the contract requires
+         identity (at zero cost) where ``take`` is False, which is what
+         makes the engine's ``lax.cond`` skip bit-equal to this;
+      3. resample (only if the worker defines the optional hooks),
+         then one segment for every worker;
+      4. broadcast on STRICT improvement of the certificate (eps gates
+         acceptance only).
+    """
+    use_resample = has_resample_hooks(worker)
+
+    def round_fn(state: Any, bcast_certs: jnp.ndarray, bcast_models: Any):
+        w = bcast_certs.shape[0]
+        dst = jnp.arange(w)
+        # --- 1. deliver last round's broadcasts (delay 1) ---------------
+        cand = jnp.where(
+            dst[:, None] == dst[None, :], jnp.inf, bcast_certs[None, :]
+        )  # (dst, src), self masked
+        best_src = jnp.argmin(cand, axis=1)
+        best_cert = cand[dst, best_src]
+        local = worker.certificates(state)
+        take = accepts(local, best_cert, eps) & jnp.isfinite(best_cert)
+        in_models = jax.tree_util.tree_map(lambda a: a[best_src], bcast_models)
+        # --- 2. adopt ----------------------------------------------------
+        state, _ = worker.adopt_batch(state, in_models, best_cert, take)
+        # --- 3. one segment per worker (all active: uniform speed) -------
+        if use_resample:
+            need = worker.needs_resample(state)
+            state, _ = jax.lax.cond(
+                jnp.any(need),
+                lambda op: worker.resample_round(op[0], op[1]),
+                lambda op: (op[0], jnp.zeros((w,), jnp.float32)),
+                (state, need),
+            )
+            scan_mask = ~need
+        else:
+            scan_mask = jnp.ones((w,), bool)
+        certs_pre = worker.certificates(state)
+        state, _, fired = worker.scan_round(state, scan_mask)
+        certs = worker.certificates(state)
+        # --- 4. broadcast strict improvements ----------------------------
+        improved = fired & improves(certs_pre, certs, 0.0) & scan_mask
+        bcast_certs = jnp.where(improved, certs, jnp.inf)
+        # non-improved rows of the export are dead payload (their certs
+        # are +inf, delivery can never select them) — carrying the full
+        # fresh export is the ring's snapshot-at-broadcast-round exactly
+        bcast_models = worker.export_models(state)
+        return state, certs, bcast_certs, bcast_models
+
+    return round_fn
+
+
+@dataclasses.dataclass
+class OracleResult:
+    state: Any  # final batched worker state
+    certs: np.ndarray  # (W,) final certificates
+    history: np.ndarray  # (rounds, W) post-round certificates
+    rounds: int
+
+
+def oracle_run(
+    worker: Any,
+    n_workers: int,
+    max_rounds: int,
+    eps: float = 0.0,
+    seed: int = 0,
+    target_certificate: float | None = None,
+) -> OracleResult:
+    """Run :func:`make_oracle_round` from ``worker.init_batch`` until
+    ``max_rounds`` or any certificate crosses ``target_certificate``
+    (f32 compare, matching the engine's in-scan stop)."""
+    state = worker.init_batch(n_workers, seed)
+    bcast_certs = jnp.full((n_workers,), jnp.inf, jnp.float32)
+    bcast_models = worker.export_models(state)
+    round_fn = jax.jit(make_oracle_round(worker, eps))
+    history = []
+    rounds = 0
+    for _ in range(max_rounds):
+        state, certs, bcast_certs, bcast_models = round_fn(
+            state, bcast_certs, bcast_models
+        )
+        history.append(np.asarray(certs))
+        rounds += 1
+        if target_certificate is not None and bool(
+            np.any(np.asarray(certs) <= np.float32(target_certificate))
+        ):
+            break
+    final = np.asarray(worker.certificates(state))
+    return OracleResult(
+        state=state, certs=final, history=np.stack(history), rounds=rounds
+    )
 
 
 def make_tmsn_round(

@@ -7,9 +7,10 @@ Three guards:
 
   * every internal markdown link/anchor in README.md, docs/, ROADMAP.md
     and CHANGES.md resolves (tools/check_md_links.py);
-  * docs/config.md cannot drift from EngineConfig: every dataclass
-    field and every REPRO_* env override must be documented, and every
-    documented override must still exist in the code;
+  * docs/config.md cannot drift from EngineConfig or TMSNSGDConfig:
+    every dataclass field and every REPRO_* env override must be
+    documented, and every documented override must still exist in the
+    code;
   * the README quickstart commands reference real files, and its tier-1
     verify line actually collects the suite (smoke-run with
     --collect-only: cheap, and zero collection errors is a standing
@@ -98,6 +99,22 @@ class TestConfigReference:
         phantom = sorted(documented - self._env_vars_in_code())
         assert not phantom, (
             f"docs/config.md documents env overrides the code no longer reads: {phantom}"
+        )
+
+    def test_every_sgd_config_field_documented(self):
+        """The SGD-worker knobs (local_steps, ema, width_coef, ...)
+        have their own reference section; it must track TMSNSGDConfig
+        field-for-field like the EngineConfig table does."""
+        from repro.core.tmsn_sgd import TMSNSGDConfig
+
+        doc = self._doc()
+        missing = [
+            f.name
+            for f in dataclasses.fields(TMSNSGDConfig)
+            if f"`{f.name}`" not in doc
+        ]
+        assert not missing, (
+            f"TMSNSGDConfig fields undocumented in docs/config.md: {missing}"
         )
 
     def test_ci_matrix_legs_match_workflow(self):

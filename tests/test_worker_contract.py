@@ -1,0 +1,423 @@
+"""Conformance suite for the first-class worker API
+(:mod:`repro.core.worker`) and the engine-hosted TMSN-SGD worker.
+
+Three layers:
+
+  * a reusable contract harness, run against BOTH production workers
+    (``BatchedSparrowWorker`` — boosting, every optional hook defined —
+    and ``BatchedSGDWorker`` — transformer training, NO optional hook):
+    state/certificate shapes, masked-out workers bitwise unchanged at
+    zero cost, adopt-batch identity where ``take`` is False (what makes
+    the engine's ``lax.cond`` skip sound), certificate monotonicity
+    under random accept-gated scan/adopt sequences;
+  * the optional-hook machinery itself: resample-hook detection,
+    the shared ``export_payload_rows`` fallback, and the
+    ``payload_bytes`` resolution order — including the pin that
+    Sparrow's hand-written byte count matches the value derived from
+    its exported pytree via ``jax.eval_shape`` (the derived path cannot
+    drift from reality; the hand path could);
+  * substrate equivalence: both workers under ``TMSNEngine`` against
+    the dense delay-1 oracle (``repro.core.tmsn_sgd.oracle_run``) on
+    uniform speed / zero latency, and the SGD worker across every
+    sharded leg — dense, gated, sparse in-flight, pod mesh — on 8
+    forced host devices (single-device runs skip those).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.boosting import BatchedSparrowWorker, SparrowConfig
+from repro.boosting.scanner import ScannerConfig
+from repro.boosting.stumps import empty_model, model_payload_bytes
+from repro.core.engine import EngineConfig, TMSNEngine, make_engine
+from repro.core.engine_sharded import sharded_engine_available
+from repro.core.sgd_worker import lm_sgd_worker
+from repro.core.tmsn_sgd import TMSNSGDConfig, oracle_run
+from repro.core.worker import (
+    BatchedTMSNWorker,
+    export_payload_rows,
+    has_resample_hooks,
+    payload_bytes_from_export,
+    resolve_payload_bytes,
+)
+from repro.data.splice import SpliceConfig, make_splice_like, train_test_split
+from repro.launch.mesh import make_worker_mesh
+from repro.models.config import ArchConfig
+from repro.optim import AdamWConfig
+
+W = 4  # worker count every harness case uses
+
+
+# ---------------------------------------------------------------------------
+# fixtures: one instance of each production worker, sized for CI
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sparrow_worker():
+    xb, y, _ = make_splice_like(SpliceConfig(n=4_000, d=12, num_bins=8, seed=3))
+    xtr, ytr, _, _ = train_test_split(xb, y)
+    cfg = SparrowConfig(
+        sample_size=256,
+        capacity=16,
+        scanner=ScannerConfig(chunk_size=128, num_bins=8, gamma0=0.25),
+        n_workers=W,
+    )
+    return BatchedSparrowWorker(xtr, ytr, cfg)
+
+
+TINY_ARCH = ArchConfig(
+    name="tiny-contract",
+    arch_type="llama",
+    num_layers=1,
+    d_model=16,
+    num_heads=2,
+    num_kv_heads=2,
+    d_ff=32,
+    vocab=64,
+    remat=False,
+    compute_dtype="float32",
+)
+
+
+def _sgd_worker(local_steps=2, ema=0.8, width_coef=1.0):
+    return lm_sgd_worker(
+        TINY_ARCH,
+        AdamWConfig(lr=1e-2),
+        TMSNSGDConfig(local_steps=local_steps, ema=ema, width_coef=width_coef),
+        batch_size=2,
+        seq=8,
+    )
+
+
+@pytest.fixture(scope="module")
+def sgd_worker():
+    return _sgd_worker()
+
+
+@pytest.fixture(params=["sparrow", "sgd"])
+def worker(request, sparrow_worker, sgd_worker):
+    return sparrow_worker if request.param == "sparrow" else sgd_worker
+
+
+# ---------------------------------------------------------------------------
+# contract harness (parametrized over both production workers)
+# ---------------------------------------------------------------------------
+
+
+def _leaves(tree):
+    return jax.tree_util.tree_leaves(tree)
+
+
+def _assert_rows_equal(tree_a, tree_b, rows):
+    for a, b in zip(_leaves(tree_a), _leaves(tree_b)):
+        np.testing.assert_array_equal(np.asarray(a)[rows], np.asarray(b)[rows])
+
+
+class TestWorkerContract:
+    def test_state_and_certificate_shapes(self, worker):
+        state = worker.init_batch(W, seed=0)
+        for leaf in _leaves(state):
+            assert leaf.shape[:1] == (W,), f"leaf {leaf.shape} lacks the (W,) axis"
+        certs = worker.certificates(state)
+        assert certs.shape == (W,) and certs.dtype == jnp.float32
+        for leaf in _leaves(worker.export_models(state)):
+            assert leaf.shape[:1] == (W,)
+        state2, cost, fired = worker.scan_round(state, jnp.ones((W,), bool))
+        assert cost.shape == (W,) and fired.shape == (W,)
+        assert fired.dtype == jnp.bool_
+
+    def test_masked_rows_unchanged_at_zero_cost(self, worker):
+        state = worker.init_batch(W, seed=0)
+        # a couple of warmup segments so masked rows carry real history
+        state, _, _ = worker.scan_round(state, jnp.ones((W,), bool))
+        mask = jnp.asarray([True, False, True, False])
+        new, cost, fired = worker.scan_round(state, mask)
+        off = np.asarray(~mask)
+        _assert_rows_equal(new, state, off)
+        np.testing.assert_array_equal(np.asarray(cost)[off], 0.0)
+        np.testing.assert_array_equal(np.asarray(fired)[off], False)
+
+    def test_adopt_identity_where_take_false(self, worker):
+        """The oracle calls adopt_batch unconditionally while the engine
+        lax.cond-skips it — they only agree if take=False rows (and the
+        all-False call) are the identity at zero cost."""
+        state = worker.init_batch(W, seed=0)
+        state, _, _ = worker.scan_round(state, jnp.ones((W,), bool))
+        models = worker.export_models(state)
+        donors = jnp.asarray([1, 2, 3, 0])
+        in_models = jax.tree_util.tree_map(lambda a: a[donors], models)
+        in_certs = worker.certificates(state)[donors] - 1.0
+        new, cost = worker.adopt_batch(
+            state, in_models, in_certs, jnp.zeros((W,), bool)
+        )
+        _assert_rows_equal(new, state, np.arange(W))
+        np.testing.assert_array_equal(np.asarray(cost), 0.0)
+
+    def test_certificates_monotone_under_random_protocol(self, worker):
+        """Random masked segments interleaved with accept-gated adopts:
+        the certificate vector must never increase (the property every
+        gated-gossip / pod-mesh equivalence argument leans on)."""
+        rng = np.random.default_rng(7)
+        state = worker.init_batch(W, seed=1)
+        certs = np.asarray(worker.certificates(state))
+        for _ in range(8):
+            mask = jnp.asarray(rng.random(W) < 0.7)
+            state, _, _ = worker.scan_round(state, mask)
+            after = np.asarray(worker.certificates(state))
+            assert np.all(after <= certs + 1e-7), (after, certs)
+            certs = after
+            # accept-gated adopt from a random donor permutation
+            donors = jnp.asarray(rng.permutation(W))
+            models = worker.export_models(state)
+            in_models = jax.tree_util.tree_map(lambda a: a[donors], models)
+            in_certs = jnp.asarray(certs, jnp.float32)[donors]
+            take = (
+                jnp.asarray(rng.random(W) < 0.5)
+                & (in_certs < jnp.asarray(certs, jnp.float32))
+            )
+            state, _ = worker.adopt_batch(state, in_models, in_certs, take)
+            after = np.asarray(worker.certificates(state))
+            assert np.all(after <= certs + 1e-7), (after, certs)
+            certs = after
+
+
+# ---------------------------------------------------------------------------
+# optional-hook machinery
+# ---------------------------------------------------------------------------
+
+
+class TestOptionalHooks:
+    def test_resample_hook_detection(self, sparrow_worker, sgd_worker):
+        assert has_resample_hooks(sparrow_worker)
+        assert not has_resample_hooks(sgd_worker)
+        # an engine built over a hook-less worker drops the branch
+        eng = TMSNEngine(sgd_worker, EngineConfig(n_workers=W, max_rounds=1))
+        assert eng._has_resample is False
+        eng = TMSNEngine(
+            sparrow_worker, EngineConfig(n_workers=W, max_rounds=1)
+        )
+        assert eng._has_resample is True
+
+    def test_sparrow_hand_payload_bytes_matches_derived(self, sparrow_worker):
+        """Satellite 2: the hand-written byte count and the eval_shape
+        derivation must agree — the derived value is ground truth."""
+        hand = sparrow_worker.payload_bytes()
+        derived = payload_bytes_from_export(sparrow_worker, W, seed=0)
+        assert hand == derived
+        assert hand == model_payload_bytes(
+            empty_model(sparrow_worker.config.capacity)
+        )
+        # resolution order: a defined hook wins (even when equal here)
+        assert resolve_payload_bytes(sparrow_worker, W, seed=0) == hand
+
+    def test_sgd_payload_bytes_derived(self, sgd_worker):
+        """No hook on the SGD worker: resolution falls through to the
+        derived value — the per-worker params footprint."""
+        derived = resolve_payload_bytes(sgd_worker, W, seed=0)
+        state = sgd_worker.init_batch(W, seed=0)
+        params_bytes = sum(
+            int(np.prod(a.shape[1:])) * a.dtype.itemsize
+            for a in _leaves(sgd_worker.export_models(state))
+        )
+        assert derived == params_bytes > 0
+
+    def test_export_payload_rows_fallback(self, sparrow_worker, sgd_worker):
+        rows = jnp.asarray([2, 0])
+        for w in (sparrow_worker, sgd_worker):
+            state = w.init_batch(W, seed=0)
+            got = export_payload_rows(w, state, rows)
+            want = jax.tree_util.tree_map(
+                lambda a: a[rows], w.export_models(state)
+            )
+            for g, x in zip(_leaves(got), _leaves(want)):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(x))
+
+    def test_protocol_default_bodies_inheritable(self):
+        """A worker subclassing the protocol inherits working no-op
+        resample hooks and the indexing payload-rows fallback."""
+
+        class Minimal(BatchedTMSNWorker):
+            def init_batch(self, n_workers, seed):
+                return {"c": jnp.zeros((n_workers,), jnp.float32)}
+
+            def scan_round(self, state, mask):
+                c = state["c"] - mask.astype(jnp.float32)
+                return {"c": c}, mask.astype(jnp.float32), mask
+
+            def certificates(self, state):
+                return state["c"]
+
+            def export_models(self, state):
+                return {"m": state["c"]}
+
+            def adopt_batch(self, state, models, certs, take):
+                return (
+                    {"c": jnp.where(take, certs, state["c"])},
+                    jnp.zeros_like(state["c"]),
+                )
+
+        w = Minimal()
+        state = w.init_batch(3, 0)
+        assert not np.any(np.asarray(w.needs_resample(state)))
+        same, cost = w.resample_round(state, jnp.ones((3,), bool))
+        np.testing.assert_array_equal(np.asarray(same["c"]), np.asarray(state["c"]))
+        np.testing.assert_array_equal(np.asarray(cost), 0.0)
+        rows = export_payload_rows(w, state, jnp.asarray([1]))
+        assert rows["m"].shape == (1,)
+        with pytest.raises(NotImplementedError):
+            w.payload_bytes()
+        # the default (inherited, not overridden) payload_bytes does NOT
+        # shadow derivation — resolve falls through to eval_shape
+        assert resolve_payload_bytes(w, 3, seed=0) == 4
+
+    def test_engine_protocol_home(self):
+        """The redesign's point: engine.py consumes the contract, it no
+        longer defines it (and never references a concrete worker)."""
+        import inspect
+
+        import repro.core.engine as engine_mod
+        import repro.core.worker as worker_mod
+
+        assert inspect.getmodule(BatchedTMSNWorker) is worker_mod
+        src = inspect.getsource(engine_mod)
+        assert "class BatchedTMSNWorker" not in src
+        assert "parrow" not in src  # no Sparrow-specific types in engines
+        assert "parrow" not in inspect.getsource(
+            __import__("repro.core.engine_sharded", fromlist=["x"])
+        )
+
+
+# ---------------------------------------------------------------------------
+# substrate equivalence: engines vs the dense delay-1 oracle
+# ---------------------------------------------------------------------------
+
+ROUNDS = 8
+
+
+def _engine_cfg(**kw):
+    base = dict(
+        n_workers=W,
+        eps=0.0,
+        max_rounds=ROUNDS,
+        delay_rounds=1,
+        seed=0,
+    )
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+class TestEngineOracleEquivalence:
+    def test_engine_matches_oracle(self, worker):
+        """Uniform speed, delay 1, no failures: the round engine must be
+        bit-identical to the worker-level synchronous oracle — for BOTH
+        production workers."""
+        orc = oracle_run(worker, W, ROUNDS, eps=0.0, seed=0)
+        res = TMSNEngine(worker, _engine_cfg()).run()
+        np.testing.assert_array_equal(
+            np.asarray(res.final_certificates, np.float32), orc.certs
+        )
+        # oracle history is monotone per worker
+        assert np.all(np.diff(orc.history, axis=0) <= 1e-7)
+
+    def test_sgd_engine_history_monotone(self, sgd_worker):
+        res = TMSNEngine(sgd_worker, _engine_cfg()).run()
+        per_worker = {}
+        for _, wid, cert in res.history:
+            prev = per_worker.get(wid)
+            assert prev is None or cert <= prev + 1e-7
+            per_worker[wid] = cert
+        assert res.rounds == ROUNDS
+        assert res.bytes_broadcast > 0  # derived payload_bytes flowed in
+
+
+needs_devices = pytest.mark.skipif(
+    not sharded_engine_available(),
+    reason="sharded engine needs >=2 devices "
+    "(CI forces 8 via --xla_force_host_platform_device_count)",
+)
+
+
+@needs_devices
+class TestShardedSGDWorker:
+    """The acceptance criterion: BatchedSGDWorker completes runs under
+    ShardedTMSNEngine in dense AND gated modes, plus a pod-mesh leg and
+    the sparse in-flight state, all bit-identical to the oracle."""
+
+    W8 = 8
+
+    @pytest.fixture(scope="class")
+    def oracle8(self, sgd_worker):
+        return oracle_run(sgd_worker, self.W8, ROUNDS, eps=0.0, seed=0)
+
+    def _run(self, sgd_worker, mesh, **kw):
+        cfg = EngineConfig(
+            n_workers=self.W8,
+            eps=0.0,
+            max_rounds=ROUNDS,
+            delay_rounds=1,
+            seed=0,
+            mesh=mesh,
+            **kw,
+        )
+        return make_engine(sgd_worker, cfg).run()
+
+    def _mesh(self):
+        n = len(jax.devices())
+        while self.W8 % n:
+            n -= 1
+        return make_worker_mesh(n)
+
+    def test_dense(self, sgd_worker, oracle8):
+        res = self._run(sgd_worker, self._mesh(), gossip_mode="dense")
+        np.testing.assert_array_equal(
+            np.asarray(res.final_certificates, np.float32), oracle8.certs
+        )
+
+    def test_gated(self, sgd_worker, oracle8):
+        res = self._run(
+            sgd_worker, self._mesh(), gossip_mode="gated", gossip_top_k=1
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.final_certificates, np.float32), oracle8.certs
+        )
+        assert res.gossip_mode == "gated"
+
+    def test_sparse_inflight(self, sgd_worker, oracle8):
+        res = self._run(
+            sgd_worker,
+            self._mesh(),
+            gossip_mode="dense",
+            inflight_capacity=self.W8,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.final_certificates, np.float32), oracle8.certs
+        )
+        assert res.messages_evicted == 0  # capacity covered: exact run
+
+    def test_pod_mesh(self, sgd_worker, oracle8):
+        if len(jax.devices()) < 4:
+            pytest.skip("pod mesh needs >=4 devices")
+        mesh = make_worker_mesh(pods=2)
+        # k=1/top_k=1 is the bit-exact cross-pod regime (docs/config.md)
+        res = self._run(
+            sgd_worker,
+            mesh,
+            gossip_mode="dense",
+            cross_pod_every_k=1,
+            cross_pod_top_k=1,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.final_certificates, np.float32), oracle8.certs
+        )
+
+    def test_final_cert_improves_from_init(self, sgd_worker, oracle8):
+        """The run actually trains: no certificate above its round-0
+        estimate, and somebody made strict progress (the best worker can
+        plateau exactly at its own adopted broadcast, so per-worker
+        strictness would overclaim)."""
+        assert np.all(np.isfinite(oracle8.certs))
+        assert np.all(oracle8.certs <= oracle8.history[0] + 1e-7)
+        assert np.min(oracle8.certs) < np.max(oracle8.history[0])
