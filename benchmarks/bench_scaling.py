@@ -59,6 +59,18 @@ the cap) — the bench fails loudly if dense unexpectedly fits. A
 roofline accounting of the fused kernel
 (launch/hlo_analysis.round_step_roofline) closes the section.
 
+The *control-plane* section sweeps W ∈ {4096, 10240} (toy worker,
+gated gossip, capacity 64, uniform delay, the same 9 GiB RLIMIT_AS cap)
+with ``control_plane`` dense vs sparse: dense ships W·5 B of
+certs+flags every round, sparse only each device's top-k
+(cert, global id, round) triples at 12 B each. Under uniform delay the
+end state must stay digest-identical (the suppressed-runner-up argument
+in docs/architecture.md) and at W=10240 the per-round control bytes
+must collapse >= 10x — both enforced loudly. A het-delay pair at
+W=4096 then measures (reports, never asserts) the sparse-control
+approximation gap, exactly like the gated-gossip and bounded-queue
+sections above.
+
 The *pod* section runs W=256 on a hierarchical (2, 4) ``(pod, workers)``
 mesh and reports the two interconnect tiers separately — intra-pod
 all_gather bytes/round (ICI) vs amortized cross-pod candidate-exchange
@@ -243,6 +255,7 @@ def _sharded_child(
     delay_profile: str = "uniform",
     mem_gb: int = 0,
     worker_kind: str = "sparrow",
+    control_plane: str = "dense",
 ) -> dict:
     """Runs inside the subprocess (forced host devices already in env):
     one shard-mapped engine run of ``rounds`` rounds, timed after a
@@ -254,7 +267,8 @@ def _sharded_child(
     the dense-path memory wall is a hard, reproducible failure instead
     of an allocator-dependent slowdown; ``worker_kind="toy"`` swaps the
     Sparrow worker for :class:`_RoundOnlyWorker` so the wall isolates
-    the round machinery."""
+    the round machinery; ``control_plane="sparse"`` swaps the dense
+    certs/flags control gather for top-k candidate triples."""
     import hashlib
 
     from repro.core.engine import EngineConfig, make_engine, quantize_latency
@@ -300,6 +314,7 @@ def _sharded_child(
             cross_pod_top_k=1,
             inflight_capacity=capacity,
             delay_rounds=delay_rounds,
+            control_plane=control_plane,
         ),
     )
     res = eng.run()  # compile
@@ -326,6 +341,8 @@ def _sharded_child(
         "messages_evicted": res.messages_evicted,
         "inflight_capacity": capacity,
         "inflight_occupancy_peak": res.inflight_occupancy_peak,
+        "control_plane": res.control_plane,
+        "control_bytes_per_round": res.control_bytes_per_round,
         "best_cert": min(res.final_certificates),
         # digest of ALL final certs so the parent can check dense/gated
         # end-state identity (uniform delay) without shipping W floats
@@ -343,6 +360,7 @@ def _run_sharded(
     delay_profile: str = "uniform",
     mem_gb: int = 0,
     worker_kind: str = "sparrow",
+    control_plane: str = "dense",
     check: bool = True,
     timeout: int = 3600,
 ) -> dict:
@@ -366,7 +384,7 @@ def _run_sharded(
             [sys.executable, "-m", "benchmarks.bench_scaling",
              "--sharded-child", str(w), str(SHARDED_DEVICES), str(rounds), gossip_mode,
              str(pods), str(cross_k), str(capacity), delay_profile, str(mem_gb),
-             worker_kind],
+             worker_kind, control_plane],
             env=env,
             cwd=root,
             capture_output=True,
@@ -393,7 +411,8 @@ def _run_sharded(
             }
         raise RuntimeError(
             f"sharded child W={w} ({gossip_mode}, pods={pods}, k={cross_k}, "
-            f"capacity={capacity}, delay={delay_profile}, mem_gb={mem_gb}) failed:\n"
+            f"capacity={capacity}, delay={delay_profile}, mem_gb={mem_gb}, "
+            f"control={control_plane}) failed:\n"
             f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
         )
     # the child prints exactly one JSON line last (jax may warn above it)
@@ -688,6 +707,91 @@ def run(quick: bool = False) -> list[str]:
     lines.append(f"{pre}.per_segment_us,{sparse4['per_segment_us']:.0f},")
     lines.append(f"{pre}.messages_evicted,{sparse4['messages_evicted']},{sparse4['rounds']}_rounds")
 
+    # --- control plane: dense certs/flags vs top-k candidate triples ------
+    # W ∈ {4096, 10240} on the toy worker (round machinery is the cost),
+    # gated gossip, sparse in-flight capacity 64, uniform delay, under
+    # the same hard 9 GiB address-space cap as the memory-wall run — the
+    # large-W regime the sparse control plane exists for. Dense control
+    # gathers W_tier · 5 bytes of certs+flags every round; sparse
+    # control ships only n_dev · k · 12 bytes of (cert, id, round)
+    # triples. Under uniform delay the end state MUST be
+    # digest-identical (suppressed runner-ups can never win a delivery
+    # argmin — docs/architecture.md), and at W=10240 the control bytes
+    # must collapse >= 10x — both failures are loud, not reported.
+    for wc in (4096, 10240):
+        pair = {}
+        for plane in ("dense", "sparse"):
+            res = _run_sharded(
+                wc, rounds, gossip_mode="gated", capacity=cap, worker_kind="toy",
+                mem_gb=9, control_plane=plane,
+            )
+            pair[plane] = res
+            out[f"ctrl_w{wc}_{plane}"] = res
+            pre = f"scaling.ctrl_w{wc}_{plane}"
+            lines.append(
+                f"{pre}.wall_ms_per_round,{res['wall_ms_per_round']:.1f},9gib_cap"
+            )
+            lines.append(
+                f"{pre}.control_bytes_per_round,{res['control_bytes_per_round']},"
+                f"{plane}_control"
+            )
+            lines.append(
+                f"{pre}.gossip_bytes_per_round,{res['gossip_bytes_per_round']},incl_control"
+            )
+            lines.append(
+                f"{pre}.ici_us_per_round,"
+                f"{1e6 * ici_round_seconds(res['gossip_bytes_per_round']):.1f},"
+                f"derived_wire_time"
+            )
+        if pair["sparse"]["certs_digest"] != pair["dense"]["certs_digest"]:
+            # uniform delay: sparse control MUST reproduce dense control
+            # exactly — a mismatch is an equivalence regression, not
+            # noise, and has to fail the bench loudly
+            raise RuntimeError(
+                f"sparse control plane diverged from dense at W={wc} under uniform "
+                f"delay: certs digest {pair['sparse']['certs_digest']} != "
+                f"{pair['dense']['certs_digest']}"
+            )
+        lines.append(f"scaling.ctrl_w{wc}_sparse.certs_identical_to_dense,1,uniform_delay")
+        ctrl_drop = pair["dense"]["control_bytes_per_round"] / max(
+            pair["sparse"]["control_bytes_per_round"], 1
+        )
+        out[f"ctrl_w{wc}_reduction_sparse_vs_dense"] = ctrl_drop
+        lines.append(
+            f"scaling.ctrl_w{wc}_sparse.control_reduction_x,{ctrl_drop:.1f},"
+            f"dense_over_sparse"
+        )
+        if wc == 10240 and ctrl_drop < 10.0:
+            raise RuntimeError(
+                f"sparse control plane only cut control bytes/round {ctrl_drop:.1f}x "
+                f"at W={wc} (expected >= 10x) — the sparse-control traffic claim "
+                "no longer holds"
+            )
+
+    # heterogeneous delays at W=4096: with mixed due rounds a suppressed
+    # runner-up CAN win a later delivery argmin, so sparse control is an
+    # approximation — the dense-vs-sparse certificate gap is MEASURED
+    # and reported, never asserted away.
+    wc = 4096
+    chet_d = _run_sharded(
+        wc, rounds, gossip_mode="gated", capacity=cap, worker_kind="toy",
+        delay_profile="het32", control_plane="dense",
+    )
+    chet_s = _run_sharded(
+        wc, rounds, gossip_mode="gated", capacity=cap, worker_kind="toy",
+        delay_profile="het32", control_plane="sparse",
+    )
+    out[f"ctrl_w{wc}_het32_dense"] = chet_d
+    out[f"ctrl_w{wc}_het32_sparse"] = chet_s
+    pre = f"scaling.ctrl_w{wc}_het32"
+    gap = abs(chet_s["best_cert"] - chet_d["best_cert"])
+    out[f"ctrl_w{wc}_het32_best_cert_gap"] = gap
+    lines.append(f"{pre}.best_cert_gap_vs_dense,{gap:.5f},measured_divergence")
+    lines.append(
+        f"{pre}.certs_identical_to_dense,"
+        f"{int(chet_s['certs_digest'] == chet_d['certs_digest'])},het_delay_approx"
+    )
+
     # roofline accounting of the fused delivery kernel at the sweep sizes
     from repro.launch.hlo_analysis import round_step_roofline
 
@@ -721,11 +825,12 @@ def _main() -> None:
         delay_profile = sys.argv[9] if len(sys.argv) > 9 else "uniform"
         mem_gb = int(sys.argv[10]) if len(sys.argv) > 10 else 0
         worker_kind = sys.argv[11] if len(sys.argv) > 11 else "sparrow"
+        control_plane = sys.argv[12] if len(sys.argv) > 12 else "dense"
         print(
             json.dumps(
                 _sharded_child(
                     w, n_dev, rounds, mode, pods, cross_k, capacity, delay_profile, mem_gb,
-                    worker_kind,
+                    worker_kind, control_plane,
                 )
             ),
             flush=True,

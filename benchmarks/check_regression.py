@@ -64,6 +64,11 @@ GUARDED = [
     # operand footprint changed)
     ("scaling.sparse_w*.wall_ms_per_round", 0.20),
     ("scaling.round_step_w*.projected_us", 0.20),
+    # control-plane sweep (dense certs/flags vs top-k triples): the
+    # byte figures are exact formulas, so the tight guard catches any
+    # control-accounting regression; wall clock gets the usual headroom
+    ("scaling.ctrl_w*.wall_ms_per_round", 0.20),
+    ("scaling.ctrl_w*.control_bytes_per_round", 0.20),
     # hierarchical (pod, workers) mesh: per-tier footprints are exact
     # formulas (any drift is an accounting regression), wall clock gets
     # the usual cross-machine headroom until rebaselined

@@ -60,7 +60,12 @@ explicit ``all_gather`` of the round's certificates and model payloads
 — O(W·payload) traffic per round instead of replicated global state,
 or O(n_dev·k·payload) under :attr:`EngineConfig.gossip_mode` "gated",
 where only each device's top-k locally-improved candidates ship their
-model.
+model. :attr:`EngineConfig.control_plane` "sparse" applies the same
+idea to the control plane itself: instead of the dense per-round (W,)
+certificate + flag all_gather, the exchange carries only (cert,
+global_id, round) triples for those top-k candidates — a fixed-size
+(n_dev, k) gather scattered into the in-flight state by global id, so
+per-round gossip cost is O(n_dev·k), independent of W.
 The equivalence contract is strict: on identical configs and seeds the
 sharded engine must produce the *same final certificates* as this
 single-device engine (which PR 1 in turn pins against the event-driven
@@ -93,6 +98,7 @@ split its ``shard_map`` enforces.
 from __future__ import annotations
 
 import dataclasses
+import math
 import os
 from typing import Any, NamedTuple
 
@@ -108,14 +114,24 @@ from repro.core.worker import (
     resolve_payload_bytes,
 )
 
+#: multiplier applied to the warm-up probe's measured
+#: ``inflight_occupancy_peak`` when ``inflight_capacity="auto"`` sizes
+#: the pending queues — headroom for occupancy growth past the probe
+#: window (e.g. laggards catching up, delay tails filling in)
+AUTO_CAPACITY_HEADROOM = 2.0
 
-def _env_int(name: str, default: int) -> int:
+
+def _env_int(name: str, default: int, special: tuple[str, ...] = ()) -> int | str:
     """Integer ``REPRO_*`` override: unset/empty/whitespace falls back
     to the default; a malformed value raises naming the variable (the
-    bare ``int()`` error would not say where the bad string came from)."""
+    bare ``int()`` error would not say where the bad string came from).
+    ``special`` whitelists non-integer sentinel values (e.g. ``"auto"``
+    for REPRO_INFLIGHT_CAPACITY) that pass through verbatim."""
     raw = os.environ.get(name, "").strip()
     if not raw:
         return default
+    if raw.lower() in special:
+        return raw.lower()
     try:
         return int(raw)
     except ValueError:
@@ -202,10 +218,14 @@ class EngineConfig:
     #: peak per-destination occupancy the sparse run is bit-identical
     #: to the dense oracle (``SimResult.messages_evicted == 0`` is the
     #: run-level witness); smaller C is an explicit, measured
-    #: approximation — see docs/config.md. Env-overridable so a CI
-    #: matrix leg can rerun the tier sparse: REPRO_INFLIGHT_CAPACITY.
-    inflight_capacity: int = dataclasses.field(
-        default_factory=lambda: _env_int("REPRO_INFLIGHT_CAPACITY", 0)
+    #: approximation — see docs/config.md. ``"auto"`` sizes C from a
+    #: short warm-up occupancy probe at run() time: the probe's measured
+    #: ``inflight_occupancy_peak`` × ``AUTO_CAPACITY_HEADROOM``, logged
+    #: into ``SimResult.inflight_capacity_selected``. Env-overridable so
+    #: a CI matrix leg can rerun the tier sparse:
+    #: REPRO_INFLIGHT_CAPACITY (accepts ``auto``).
+    inflight_capacity: Any = dataclasses.field(
+        default_factory=lambda: _env_int("REPRO_INFLIGHT_CAPACITY", 0, special=("auto",))
     )
     #: delivery implementation of the sparse path (ignored while
     #: ``inflight_capacity == 0``): "pallas" routes delivery-argmin +
@@ -215,6 +235,23 @@ class EngineConfig:
     #: bit-identical — pinned in tests. Env: REPRO_ROUND_STEP_IMPL.
     round_step_impl: str = dataclasses.field(
         default_factory=lambda: _env_str("REPRO_ROUND_STEP_IMPL", "pallas")
+    )
+    #: per-round control-plane exchange policy. "dense": every round
+    #: moves a (W,) certificate (+ broadcast-flag) all_gather and the
+    #: receivers scan/scatter the full width — O(W) wire and
+    #: O(W_local·W) work per round even in gated gossip. "sparse": the
+    #: exchange carries only each device's top-``gossip_top_k``
+    #: locally-improved candidates as (cert, global_id, round) triples —
+    #: a fixed-size (n_dev, k) all_gather, OOB-padded — and receivers
+    #: scatter them into the pending queues / in-flight state by global
+    #: id: O(n_dev·k), independent of W. Under UNIFORM delay sparse
+    #: control is bit-identical to dense control (the delivery argmin is
+    #: always among the per-device top improvers — pinned in
+    #: tests/test_sparse_inflight.py); under heterogeneous delay it is a
+    #: measured approximation (bench_scaling.py, control-plane section).
+    #: Env-overridable: REPRO_CONTROL_PLANE.
+    control_plane: str = dataclasses.field(
+        default_factory=lambda: _env_str("REPRO_CONTROL_PLANE", "dense")
     )
     #: optional ``jax.sharding.Mesh``: a 1-D ``("workers",)`` mesh
     #: shards the worker axis over one interconnect tier; a 2-D
@@ -336,6 +373,107 @@ def _queue_push(
     )
 
 
+def _candidate_valid(
+    cand_cert: jnp.ndarray,
+    cand_ids: jnp.ndarray,
+    alive: jnp.ndarray,
+    local_gids: jnp.ndarray,
+    w: int,
+) -> jnp.ndarray:
+    """(W_local, m) validity of each sparse-control candidate at each
+    local destination: finite cert, in-range global id (OOB padding from
+    the fixed-size all_gather carries id >= W), not the destination
+    itself, destination alive."""
+    return (
+        jnp.isfinite(cand_cert)[None, :]
+        & (cand_ids[None, :] != local_gids[:, None])
+        & (cand_ids[None, :] < w)
+        & alive[:, None]
+    )
+
+
+def _queue_push_candidates(
+    queue: PendingQueue,
+    cand_cert: jnp.ndarray,
+    cand_ids: jnp.ndarray,
+    alive: jnp.ndarray,
+    local_gids: jnp.ndarray,
+    delay_rows: jnp.ndarray,
+    r: jnp.ndarray,
+    depth: int,
+    impl: str,
+) -> tuple[PendingQueue, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sparse-control ingest: merge an explicit candidate list into the
+    pending queues, evicting worst-certificate-first.
+
+    Unlike :func:`_queue_push` (which scans a dense (W,) score vector),
+    the candidates arrive as parallel (m,) arrays of certificates and
+    global source ids — the payload of the (n_dev, k) control-plane
+    all_gather, OOB-padded with ``id >= W`` / +inf certs. The merge runs
+    through the candidate-list ingest kernel (``impl`` picks the Pallas
+    kernel in ``kernels/round_step.py`` or the jnp reference in
+    ``kernels/ref.py``; bit-identical by contract) under the same total
+    order as :func:`_queue_push`'s lexsort, so the survivor set is
+    identical to a dense-score push restricted to these candidates.
+
+    Returns ``(queue, n_pushed, n_evicted, occ_pre_max)`` with the same
+    counter semantics as :func:`_queue_push` (no pre-filter here, so
+    every offered candidate is accounted directly).
+    """
+    w = delay_rows.shape[1]
+    wl, m = delay_rows.shape[0], cand_ids.shape[0]
+    ids_c = jnp.clip(cand_ids, 0, w - 1).astype(jnp.int32)
+    val = _candidate_valid(cand_cert, cand_ids, alive, local_gids, w)
+    c_cert = jnp.where(val, cand_cert[None, :], jnp.inf)
+    c_src = jnp.broadcast_to(ids_c[None, :], (wl, m))
+    c_due = jnp.where(val, r + jnp.take_along_axis(delay_rows, c_src, axis=1), -1)
+    c_slot = jnp.where(val, jnp.int32(r % depth), 0)
+    if impl == "ref":
+        from repro.kernels.ref import queue_ingest_ref as ingest
+    else:
+        from repro.kernels.ops import queue_ingest as ingest
+    q_cert, q_due, q_src, q_slot = ingest(
+        queue.cert, queue.due, queue.src, queue.slot, c_cert, c_due, c_src, c_slot
+    )
+    new = PendingQueue(cert=q_cert, src=q_src, due=q_due, slot=q_slot)
+    n_cand = jnp.sum(val, axis=1, dtype=jnp.int32)  # (wl,) offers
+    occ_pre = jnp.sum(jnp.isfinite(queue.cert), axis=1, dtype=jnp.int32) + n_cand
+    occ_after = jnp.sum(jnp.isfinite(new.cert), axis=1, dtype=jnp.int32)
+    return (
+        new,
+        jnp.sum(n_cand, dtype=jnp.int32),
+        jnp.sum(occ_pre - occ_after, dtype=jnp.int32),
+        jnp.max(occ_pre),
+    )
+
+
+def _dense_push_candidates(
+    inflight: jnp.ndarray,
+    cand_cert: jnp.ndarray,
+    cand_ids: jnp.ndarray,
+    alive: jnp.ndarray,
+    local_gids: jnp.ndarray,
+    delay_rows: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sparse-control push into the dense ``(W_local, W, D)`` in-flight
+    buffer (``inflight_capacity == 0``): scatter each candidate's
+    certificate at ``[dst, src, delay-1]`` by global id — O(W_local·m)
+    scatter work instead of the O(W_local·W·D) dense push mask. Invalid
+    candidates scatter to the OOB source index W and drop. Returns
+    ``(inflight, n_pushed)``."""
+    w = delay_rows.shape[1]
+    wl, m = delay_rows.shape[0], cand_ids.shape[0]
+    ids_c = jnp.clip(cand_ids, 0, w - 1).astype(jnp.int32)
+    val = _candidate_valid(cand_cert, cand_ids, alive, local_gids, w)
+    ids2 = jnp.where(val, cand_ids[None, :], w)  # OOB -> dropped
+    d = jnp.take_along_axis(delay_rows, jnp.broadcast_to(ids_c[None, :], (wl, m)), axis=1)
+    row_idx = jnp.broadcast_to(jnp.arange(wl, dtype=jnp.int32)[:, None], (wl, m))
+    inflight = inflight.at[row_idx, ids2, d - 1].set(
+        jnp.broadcast_to(cand_cert[None, :], (wl, m)), mode="drop"
+    )
+    return inflight, jnp.sum(val, dtype=jnp.int32)
+
+
 class EngineState(NamedTuple):
     worker: Any
     certs: jnp.ndarray  # (W,) f32 — post-round certificates, carried so
@@ -410,7 +548,13 @@ class TMSNEngine:
             raise ValueError(
                 f"cross_pod_top_k must be >= 1, got {config.cross_pod_top_k}"
             )
-        if config.inflight_capacity < 0:
+        if isinstance(config.inflight_capacity, str):
+            if config.inflight_capacity != "auto":
+                raise ValueError(
+                    f"inflight_capacity must be an int >= 0 or 'auto', "
+                    f"got {config.inflight_capacity!r}"
+                )
+        elif config.inflight_capacity < 0:
             raise ValueError(
                 f"inflight_capacity must be >= 0, got {config.inflight_capacity}"
             )
@@ -418,8 +562,20 @@ class TMSNEngine:
             raise ValueError(
                 f"round_step_impl must be 'pallas' or 'ref', got {config.round_step_impl!r}"
             )
-        #: 0 = dense (W, W, D) oracle; C >= 1 = bounded PendingQueue
-        self._capacity = int(config.inflight_capacity)
+        if config.control_plane not in ("dense", "sparse"):
+            raise ValueError(
+                f"control_plane must be 'dense' or 'sparse', got {config.control_plane!r}"
+            )
+        self._control_sparse = config.control_plane == "sparse"
+        #: 0 = dense (W, W, D) oracle; C >= 1 = bounded PendingQueue;
+        #: None = "auto", resolved by a warm-up probe at run() time
+        self._capacity: int | None = (
+            None
+            if config.inflight_capacity == "auto"
+            else int(config.inflight_capacity)
+        )
+        #: capacity the auto probe selected (0 when capacity is explicit)
+        self._auto_selected = 0
 
         delay = np.asarray(config.delay_rounds)
         if delay.ndim == 0:
@@ -596,6 +752,16 @@ class TMSNEngine:
             active,
         )
 
+    def _top_k_candidates(self, mask, certs, k: int):
+        """Rows of the (locally) best k candidates under ``mask`` and a
+        validity flag per row. Stable argsort: ties pick the lowest
+        worker row, matching the delivery argmin's tie-break. Shared by
+        gated payload gossip, the cross-pod flush, and the sparse
+        control plane."""
+        score = jnp.where(mask, certs, jnp.inf)
+        rows = jnp.argsort(score, stable=True)[:k]
+        return rows, jnp.isfinite(score[rows])
+
     def _round_step(self, state: EngineState) -> tuple[EngineState, RoundInfo]:
         cfg = self.config
         w, depth = cfg.n_workers, self._depth
@@ -684,7 +850,39 @@ class TMSNEngine:
         improved = fired & improves(certs_pre, certs, 0.0) & scan_mask
         n_evicted = jnp.zeros((), jnp.int32)
         occ_pre_max = jnp.zeros((), jnp.int32)
-        if self._capacity:
+        if self._control_sparse:
+            # sparse control plane: only the top-k improvers are offered
+            # (single-device analogue of the (n_dev, k) all_gather). The
+            # suppressed runner-ups could never have been accepted under
+            # uniform delay — every receiver's best arrival is the
+            # global min, except the min's own sender, whose local cert
+            # is already at least as good as any runner-up.
+            kc = min(int(cfg.gossip_top_k), w)
+            rows, validk = self._top_k_candidates(improved, certs, kc)
+            cand_ids = jnp.where(validk, rows.astype(jnp.int32), w)
+            cand_certs = jnp.where(validk, certs[rows], jnp.inf)
+            if self._capacity:
+                inflight, n_pushed, n_evicted, occ_pre_max = _queue_push_candidates(
+                    inflight,
+                    cand_certs,
+                    cand_ids,
+                    alive,
+                    dst_idx.astype(jnp.int32),
+                    self._delay.T,  # (dst, src) rows
+                    r,
+                    depth,
+                    cfg.round_step_impl,
+                )
+            else:
+                inflight, n_pushed = _dense_push_candidates(
+                    inflight,
+                    cand_certs,
+                    cand_ids,
+                    alive,
+                    dst_idx.astype(jnp.int32),
+                    self._delay.T,
+                )
+        elif self._capacity:
             inflight, n_pushed, n_evicted, occ_pre_max = _queue_push(
                 inflight,
                 jnp.where(improved, certs, jnp.inf),
@@ -745,8 +943,40 @@ class TMSNEngine:
         return new_state, info
 
     # ------------------------------------------------------------------
+    def _resolve_auto_capacity(self) -> None:
+        """Resolve ``inflight_capacity="auto"``: run a short warm-up
+        probe at an explicit capacity, doubling until nothing is evicted
+        (so the measured ``inflight_occupancy_peak`` is the true
+        unbounded peak, not a capacity-truncated one), then size the
+        real run's queues at peak × :data:`AUTO_CAPACITY_HEADROOM`. The
+        probe inherits every protocol knob (same engine class, same
+        mesh), so its occupancy is the run's own warm-up occupancy."""
+        cfg = self.config
+        w = cfg.n_workers
+        warmup = min(max(2 * self._depth + 2, 8), cfg.max_rounds)
+        hard_max = w * self._depth  # every (src, pending-round) pair
+        probe_cap = min(max(64, 2 * self._depth), hard_max)
+        while True:
+            probe_cfg = dataclasses.replace(
+                cfg,
+                inflight_capacity=int(probe_cap),
+                max_rounds=warmup,
+                target_certificate=None,
+                record_history=False,
+            )
+            probe = make_engine(self.worker, probe_cfg)
+            res = probe.run()
+            if res.messages_evicted == 0 or probe_cap >= hard_max:
+                break
+            probe_cap = min(2 * probe_cap, hard_max)
+        peak = max(int(res.inflight_occupancy_peak), 0)
+        self._capacity = max(1, math.ceil(peak * AUTO_CAPACITY_HEADROOM))
+        self._auto_selected = self._capacity
+
     def run(self) -> SimResult:
         cfg = self.config
+        if self._capacity is None:
+            self._resolve_auto_capacity()
         state = self._init_state()
         certs0 = np.asarray(state.certs)
         history: list[tuple[float, int, float]] = [
@@ -800,6 +1030,7 @@ class TMSNEngine:
         # counters are () scalars on the single-device engine and
         # (n_devices,) per-shard partials on the sharded one; np.sum
         # covers both (the per-shard reduction happens here, once)
+        ictrl, dctrl = self._control_split()
         traffic = TrafficCounters.from_shards(
             sent=np.asarray(state.sent),
             accepted=np.asarray(state.accepted),
@@ -807,6 +1038,7 @@ class TMSNEngine:
             payload_bytes=self._payload_bytes,
             sent_dcn=np.asarray(state.sent_dcn),
             evicted=np.asarray(state.evicted),
+            control_bytes=(ictrl + dctrl) * rounds,
         )
         final_models = [
             jax.tree_util.tree_map(lambda a, i=i: a[i], models)
@@ -827,12 +1059,21 @@ class TMSNEngine:
             gossip_bytes_per_round_dcn=dcn_bytes,
             gossip_mode=self._gossip_mode(),
             inflight_occupancy_peak=int(np.max(np.asarray(state.occ_peak))),
+            control_bytes_per_round=ictrl + dctrl,
+            control_plane=cfg.control_plane,
+            inflight_capacity_selected=self._auto_selected,
         )
 
     def _gossip_split(self) -> tuple[int, int]:
         """(ICI, DCN) cross-device exchange footprint per round; the DCN
         leg is amortized over ``cross_pod_every_k``. (0, 0) on one
         device."""
+        return 0, 0
+
+    def _control_split(self) -> tuple[int, int]:
+        """(ICI, DCN) CONTROL-plane sub-footprint of
+        :meth:`_gossip_split` per round — the certificate/flag/id bytes
+        as opposed to model payload bytes. (0, 0) on one device."""
         return 0, 0
 
     def _gossip_mode(self) -> str:

@@ -89,6 +89,24 @@ What changes relative to the single-device engine:
     ``kernels/round_step.py`` — bit-identical to the dense buffer at
     sufficient capacity (``tests/test_sparse_inflight.py``), with every
     eviction counted in per-shard ``evicted`` / ``occ_peak`` partials;
+  * **sparse control plane** (``EngineConfig.control_plane="sparse"``)
+    removes the last dense-width exchange: instead of the per-round
+    (W_tier,) certificate + flag all_gather (and its O(W_local·W)
+    receiver-side scan/scatter), each device ships only its
+    top-``gossip_top_k`` locally-improved candidates as (cert,
+    global_id, round) triples — a fixed-size (n_dev, k) all_gather,
+    OOB-padded — and receivers scatter them into the pending queues /
+    in-flight buffer by global id: O(n_dev·k) per round, independent of
+    W. Bit-identical to dense control under uniform delay — the
+    suppressed-runner-up argument above applies unchanged, because the
+    only receiver whose best arrival is not among the shipped top-k is
+    a top-k sender itself, whose monotone local certificate already
+    dominates anything suppressed (``tests/test_sparse_inflight.py``
+    pins certificates, history, rounds and adoption counts across all
+    substrates); a measured approximation under heterogeneous delay
+    (``bench_scaling.py``, control-plane section). The
+    ``kernels/round_step.py::queue_ingest`` kernel is the candidate-
+    list counterpart of the fused delivery kernel;
   * traffic counters are per-shard partials of shape ``(n_dev,)``
     (summing inside the step would cost a ``psum`` per round);
     :meth:`~repro.core.result.TrafficCounters.from_shards` reduces
@@ -137,7 +155,9 @@ from repro.core.engine import (
     EngineState,
     RoundInfo,
     TMSNEngine,
+    _dense_push_candidates,
     _queue_push,
+    _queue_push_candidates,
 )
 from repro.core.protocol import accepts, improves
 from repro.core.worker import BatchedTMSNWorker, export_payload_rows
@@ -290,25 +310,51 @@ class ShardedTMSNEngine(TMSNEngine):
         p = self._payload_bytes
         w = self.config.n_workers
         w_tier = w // self._n_pods  # workers gathered by the intra tier
+        ici_ctrl, dcn_ctrl = self._control_split()
         if self.config.gossip_mode == "gated":
-            # dense control plane (f32 cert + bool broadcast flag per
-            # tier worker) + k candidate payloads per device, each
-            # carrying an int32 global worker id
+            # control plane (see _control_split) + k candidate payloads
+            # per device; under dense control each payload also carries
+            # its int32 global worker id (under sparse control the id
+            # already rides in the control triple)
             k = min(int(self.config.gossip_top_k), self._w_local)
-            ici = w_tier * (4 + 1) + self._wpp * k * (p + 4)
+            ici = ici_ctrl + self._wpp * k * (p + (0 if self._control_sparse else 4))
         else:
-            # dense: model payload + f32 certificate + bool fired flag
-            # from every tier worker, landing on every shard
-            ici = w_tier * (p + 4 + 1)
+            # dense payloads: every tier worker's model, every round;
+            # the certificate/flag legs are the control plane
+            ici = ici_ctrl + w_tier * p
         if self._n_pods == 1:
             return ici, 0
-        # cross-pod tier: top-k pending candidates per device (f32 cert
-        # + i32 global id + payload), gathered over ALL devices every
-        # cross_pod_every_k rounds — charged to the DCN class and
-        # amortized per round
+        # cross-pod tier: top-k pending candidates per device (control
+        # triple or cert+id, plus payload), gathered over ALL devices
+        # every cross_pod_every_k rounds — charged to the DCN class and
+        # amortized per round (the control share is inside dcn_ctrl)
         kx = min(int(self.config.cross_pod_top_k), self._w_local)
-        dcn = self._n_dev * kx * (p + 4 + 4)
-        return ici, dcn // int(self.config.cross_pod_every_k)
+        dcn = (self._n_dev * kx * p) // int(self.config.cross_pod_every_k)
+        return ici, dcn + dcn_ctrl
+
+    def _control_split(self) -> tuple[int, int]:
+        """(ICI, DCN) control-plane bytes per round — the sub-share of
+        :meth:`_gossip_split` that is certificates/flags/ids rather than
+        model payloads.
+
+        Dense control: the per-round (W_tier,) all_gather of f32 certs +
+        bool broadcast flags — 5 bytes per tier worker, every round.
+        Sparse control: (cert, global_id, round) triples for each
+        device's top-k candidates — 12 bytes per candidate, n_dev·k of
+        them, independent of W. The DCN tier ships cert+id per flush
+        candidate under dense control (8 B) and the full triple under
+        sparse (12 B), amortized over ``cross_pod_every_k``."""
+        w_tier = self.config.n_workers // self._n_pods
+        if self._control_sparse:
+            k = min(int(self.config.gossip_top_k), self._w_local)
+            ici = self._wpp * k * 12
+        else:
+            ici = w_tier * 5
+        if self._n_pods == 1:
+            return ici, 0
+        kx = min(int(self.config.cross_pod_top_k), self._w_local)
+        per = 12 if self._control_sparse else 8
+        return ici, (self._n_dev * kx * per) // int(self.config.cross_pod_every_k)
 
     def _gossip_mode(self) -> str:
         return self.config.gossip_mode
@@ -320,19 +366,6 @@ class ShardedTMSNEngine(TMSNEngine):
         if self._n_pods == 1:
             return jax.lax.axis_index("workers")
         return jax.lax.axis_index("pod") * self._wpp + jax.lax.axis_index("workers")
-
-    def _top_k_candidates(self, mask: jnp.ndarray, certs: jnp.ndarray, k: int):
-        """Select up to ``k`` local rows from ``mask`` by certificate.
-
-        Stable sort so ties break toward the lowest worker id, matching
-        the delivery argmin (this is what keeps the gated/cross-pod
-        paths equal to dense under uniform delay). Returns
-        ``(rows, valid)``: ``(k,)`` local row indices and a ``(k,)``
-        validity mask (a row is valid only where ``mask`` was set).
-        """
-        score = jnp.where(mask, certs, jnp.inf)
-        rows = jnp.argsort(score, stable=True)[:k]
-        return rows, jnp.isfinite(score[rows])
 
     def _export_rows(self, wstate, rows: jnp.ndarray):
         """Candidate payloads for ``rows`` — the shared optional-hook
@@ -431,18 +464,97 @@ class ShardedTMSNEngine(TMSNEngine):
         cost = adopt_cost + resample_cost + scan_cost
         clock = state.clock + cost / jnp.maximum(consts.speed, 1e-12)
 
-        # --- 4+5. gossip, tier 1 (intra-pod / single-axis): certificates
-        # + broadcast flags always gather densely over the ``workers``
-        # axis (the cheap control plane); model payloads gather for
+        # --- 4+5. gossip, tier 1 (intra-pod / single-axis). Under the
+        # DENSE control plane, certificates + broadcast flags gather
+        # densely over the ``workers`` axis; model payloads gather for
         # every worker ("dense") or only for each device's top-k
-        # locally-improved candidates ("gated"). On a 1-D mesh the
+        # locally-improved candidates ("gated"). Under the SPARSE
+        # control plane (control_plane="sparse") there is NO (W_tier,)
+        # leg at all: the exchange carries only each device's top-k
+        # candidates as (cert, global_id) pairs — a fixed-size
+        # (n_dev, k) gather, OOB-padded — and receivers scatter them
+        # into the in-flight state by global id. On a 1-D mesh the
         # ``workers`` axis spans every device and this is the ONLY tier;
-        # on a pod mesh it spans one pod, and the gathered (W_pod,)
-        # control plane is scattered into the (W,)-wide arrays at the
-        # pod's contiguous global-id block ----------------------------------
+        # on a pod mesh it spans one pod, and (dense control only) the
+        # gathered (W_pod,) control plane is scattered into the
+        # (W,)-wide arrays at the pod's contiguous global-id block ----------
         improved = fired & improves(certs_pre, certs, 0.0) & scan_mask
         w_tier = w // self._n_pods  # workers visible to the intra tier
-        if cfg.gossip_mode == "gated":
+        pod_idx = jax.lax.axis_index("pod") if self._n_pods > 1 else None
+        n_evicted = jnp.zeros((), jnp.int32)
+        occ_pre_max = jnp.zeros((), jnp.int32)
+        if self._control_sparse:
+            kc = min(int(cfg.gossip_top_k), wl)
+            cand_rows, cand_valid = self._top_k_candidates(improved, certs, kc)
+            cand_ids = jnp.where(cand_valid, local_ids[cand_rows], w)
+            cand_certs = jnp.where(cand_valid, certs[cand_rows], jnp.inf)
+            if cfg.gossip_mode == "gated":
+                # one collective: the (k,) control triples and the (k,)
+                # candidate payloads ride together
+                gathered = jax.lax.all_gather(
+                    {
+                        "certs": cand_certs,
+                        "ids": cand_ids,
+                        "models": self._export_rows(wstate, cand_rows),
+                    },
+                    "workers",
+                    axis=0,
+                    tiled=True,
+                )  # every leg (wpp * kc, ...)
+                ring = jax.tree_util.tree_map(
+                    lambda buf, m: buf.at[r % depth, gathered["ids"]].set(
+                        m, mode="drop"
+                    ),
+                    state.ring,
+                    gathered["models"],
+                )
+            else:
+                # dense payload plane, sparse control plane: every tier
+                # worker's model still gathers, but only candidate rows
+                # are ever referenced by the in-flight state, so only
+                # those ring rows are written (scattered by global id;
+                # invalid candidates point out of bounds and drop)
+                gathered = jax.lax.all_gather(
+                    {
+                        "certs": cand_certs,
+                        "ids": cand_ids,
+                        "models": self.worker.export_models(wstate),
+                    },
+                    "workers",
+                    axis=0,
+                    tiled=True,
+                )  # certs/ids: (wpp * kc,); models: (w_tier, ...)
+                base = 0 if self._n_pods == 1 else pod_idx * w_tier
+                rows_t = jnp.clip(gathered["ids"] - base, 0, w_tier - 1)
+                ring = jax.tree_util.tree_map(
+                    lambda buf, m: buf.at[r % depth, gathered["ids"]].set(
+                        m[rows_t], mode="drop"
+                    ),
+                    state.ring,
+                    gathered["models"],
+                )
+            if self._capacity:
+                inflight, n_pushed, n_evicted, occ_pre_max = _queue_push_candidates(
+                    inflight,
+                    gathered["certs"],
+                    gathered["ids"],
+                    alive,
+                    local_ids,
+                    consts.delay_t,
+                    r,
+                    depth,
+                    cfg.round_step_impl,
+                )
+            else:
+                inflight, n_pushed = _dense_push_candidates(
+                    inflight,
+                    gathered["certs"],
+                    gathered["ids"],
+                    alive,
+                    local_ids,
+                    consts.delay_t,
+                )
+        elif cfg.gossip_mode == "gated":
             k = min(int(cfg.gossip_top_k), wl)
             cand_rows, cand_valid = self._top_k_candidates(improved, certs, k)
             bcast = jnp.zeros((wl,), bool).at[cand_rows].set(cand_valid)
@@ -496,55 +608,57 @@ class ShardedTMSNEngine(TMSNEngine):
                     gathered["models"],
                 )
 
-        if self._n_pods == 1:
-            certs_all, bcast_all = tier_certs, tier_bcast  # (W,)
-        else:
-            # scatter the pod-local control plane into global width;
-            # pod p owns the contiguous global-id block
-            # [p * W_pod, (p + 1) * W_pod)
-            pod_idx = jax.lax.axis_index("pod")
-            pod_gids = pod_idx * w_tier + jnp.arange(w_tier)
-            certs_all = jnp.full((w,), jnp.inf, jnp.float32).at[pod_gids].set(tier_certs)
-            bcast_all = jnp.zeros((w,), bool).at[pod_gids].set(tier_bcast)
-            if cfg.gossip_mode != "gated":
-                # dense intra-pod ring writes, scattered by global id
-                # into this pod's private ring replica (silent workers
-                # point out of bounds and drop)
-                ids = jnp.where(tier_bcast, pod_gids, w)
-                ring = jax.tree_util.tree_map(
-                    lambda buf, m: buf.at[r % depth, ids].set(m, mode="drop"),
-                    state.ring,
-                    gathered["models"],
+        if not self._control_sparse:
+            if self._n_pods == 1:
+                certs_all, bcast_all = tier_certs, tier_bcast  # (W,)
+            else:
+                # scatter the pod-local control plane into global width;
+                # pod p owns the contiguous global-id block
+                # [p * W_pod, (p + 1) * W_pod)
+                pod_gids = pod_idx * w_tier + jnp.arange(w_tier)
+                certs_all = (
+                    jnp.full((w,), jnp.inf, jnp.float32).at[pod_gids].set(tier_certs)
                 )
+                bcast_all = jnp.zeros((w,), bool).at[pod_gids].set(tier_bcast)
+                if cfg.gossip_mode != "gated":
+                    # dense intra-pod ring writes, scattered by global id
+                    # into this pod's private ring replica (silent workers
+                    # point out of bounds and drop)
+                    ids = jnp.where(tier_bcast, pod_gids, w)
+                    ring = jax.tree_util.tree_map(
+                        lambda buf, m: buf.at[r % depth, ids].set(m, mode="drop"),
+                        state.ring,
+                        gathered["models"],
+                    )
 
-        n_evicted = jnp.zeros((), jnp.int32)
-        occ_pre_max = jnp.zeros((), jnp.int32)
-        if self._capacity:
-            # tier-1 push into the (wl, C) pending queues: the gathered
-            # control plane is dense-width in both gossip modes, so one
-            # (W,) candidate score serves dense and gated alike; on a
-            # pod mesh bcast_all is zero outside this pod
-            inflight, n_pushed, n_evicted, occ_pre_max = _queue_push(
-                inflight,
-                jnp.where(bcast_all, certs_all, jnp.inf),
-                alive,
-                local_ids,
-                consts.delay_t,
-                r,
-                depth,
-            )
-        else:
-            d_idx = jnp.arange(depth)[None, None, :]
-            # push_mask[local dst, global src, d]; on a pod mesh bcast_all
-            # is zero outside this pod, so tier-1 pushes stay intra-pod
-            push_mask = (
-                bcast_all[None, :, None]
-                & alive[:, None, None]
-                & (local_ids[:, None] != jnp.arange(w)[None, :])[:, :, None]
-                & (d_idx == (consts.delay_t[:, :, None] - 1))
-            )
-            inflight = jnp.where(push_mask, certs_all[None, :, None], inflight)
-            n_pushed = jnp.sum(push_mask, dtype=jnp.int32)
+            if self._capacity:
+                # tier-1 push into the (wl, C) pending queues: the
+                # gathered control plane is dense-width in both gossip
+                # modes, so one (W,) candidate score serves dense and
+                # gated alike; on a pod mesh bcast_all is zero outside
+                # this pod
+                inflight, n_pushed, n_evicted, occ_pre_max = _queue_push(
+                    inflight,
+                    jnp.where(bcast_all, certs_all, jnp.inf),
+                    alive,
+                    local_ids,
+                    consts.delay_t,
+                    r,
+                    depth,
+                )
+            else:
+                d_idx = jnp.arange(depth)[None, None, :]
+                # push_mask[local dst, global src, d]; on a pod mesh
+                # bcast_all is zero outside this pod, so tier-1 pushes
+                # stay intra-pod
+                push_mask = (
+                    bcast_all[None, :, None]
+                    & alive[:, None, None]
+                    & (local_ids[:, None] != jnp.arange(w)[None, :])[:, :, None]
+                    & (d_idx == (consts.delay_t[:, :, None] - 1))
+                )
+                inflight = jnp.where(push_mask, certs_all[None, :, None], inflight)
+                n_pushed = jnp.sum(push_mask, dtype=jnp.int32)
 
         # --- gossip, tier 2 (cross-pod, DCN): improvements accumulate
         # in the pending mask and the freshest certificates flush over
@@ -580,6 +694,34 @@ class ShardedTMSNEngine(TMSNEngine):
                     ring,
                     gx["models"],
                 )
+                flushed = jnp.zeros((wl,), bool).at[rows].set(valid)
+                if self._control_sparse:
+                    # sparse control: push the gathered flush candidates
+                    # directly by global id — no (W,)-wide scatter. The
+                    # cross-pod mask (same-pod destinations already
+                    # heard tier 1) folds into candidate validity.
+                    pod_of = jnp.clip(gx["ids"], 0, w - 1) // w_tier
+                    valid_x = (gx["ids"] < w) & (pod_of != pod_idx)
+                    ids_x = jnp.where(valid_x, gx["ids"], w)
+                    certs_x = jnp.where(valid_x, gx["certs"], jnp.inf)
+                    if self._capacity:
+                        inflight, nx, ne, occ = _queue_push_candidates(
+                            inflight,
+                            certs_x,
+                            ids_x,
+                            alive,
+                            local_ids,
+                            consts.delay_t,
+                            r,
+                            depth,
+                            cfg.round_step_impl,
+                        )
+                        return (xpend & ~flushed, inflight, ring, nx, ne, occ)
+                    inflight, nx = _dense_push_candidates(
+                        inflight, certs_x, ids_x, alive, local_ids, consts.delay_t
+                    )
+                    z = jnp.zeros((), jnp.int32)
+                    return (xpend & ~flushed, inflight, ring, nx, z, z)
                 xcerts = (
                     jnp.full((w,), jnp.inf, jnp.float32)
                     .at[gx["ids"]]
@@ -590,7 +732,6 @@ class ShardedTMSNEngine(TMSNEngine):
                     .at[gx["ids"]]
                     .set(jnp.ones_like(gx["ids"], bool), mode="drop")
                 )
-                flushed = jnp.zeros((wl,), bool).at[rows].set(valid)
                 if self._capacity:
                     # same queue push as tier 1, with the candidate score
                     # masked to cross-pod sources (same-pod destinations

@@ -54,6 +54,11 @@ class TrafficCounters:
     #: payload size one push carries (kept so the derived byte split
     #: stays consistent with ``bytes_broadcast``)
     payload_bytes: int = 0
+    #: cumulative CONTROL-plane bytes over the run (certificates /
+    #: broadcast flags / candidate ids, as opposed to model payloads):
+    #: the per-round ``control_bytes_per_round`` figure × rounds. 0 on
+    #: the event sim and the single-device engine (no wire).
+    control_bytes: int = 0
 
     @property
     def sent_ici(self) -> int:
@@ -72,6 +77,7 @@ class TrafficCounters:
         payload_bytes: int,
         sent_dcn: Any = 0,
         evicted: Any = 0,
+        control_bytes: int = 0,
     ) -> "TrafficCounters":
         """Reduce per-shard partial counters into global totals.
 
@@ -92,6 +98,7 @@ class TrafficCounters:
             sent_dcn=int(np.sum(sent_dcn)),
             evicted=int(np.sum(evicted)),
             payload_bytes=payload_bytes,
+            control_bytes=int(control_bytes),
         )
 
 
@@ -145,6 +152,18 @@ class SimResult:
     #: (sparse engine only; the measured capacity floor for an exact
     #: rerun of the same config). 0 on dense/event substrates.
     inflight_occupancy_peak: int = 0
+    #: CONTROL-plane share of ``gossip_bytes_per_round`` — the
+    #: certificate/flag/id bytes as opposed to model payload bytes:
+    #:   dense control: W_tier · 5 per round (f32 cert + bool flag)
+    #:   sparse control: n_dev · k · 12 (f32 cert + i32 id + i32 round)
+    #: 0 off the sharded engines (no wire).
+    control_bytes_per_round: int = 0
+    #: which control-plane policy produced the figures above
+    #: ("dense" | "sparse")
+    control_plane: str = "dense"
+    #: the capacity the ``inflight_capacity="auto"`` warm-up probe
+    #: selected for this run (0 when capacity was explicit)
+    inflight_capacity_selected: int = 0
 
     def best_certificate_trace(self) -> list[tuple[float, float]]:
         """Monotone (time, best-cert-so-far) envelope across workers."""

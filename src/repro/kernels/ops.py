@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.edge_scan import edge_scan as _edge_scan
-from repro.kernels.round_step import round_step as _round_step
+from repro.kernels.round_step import queue_ingest as _queue_ingest, round_step as _round_step
 from repro.kernels.weight_update import scatter_model_slice, weight_update as _weight_update
 
 
@@ -178,8 +178,44 @@ def round_deliver(
     )
 
 
+def queue_ingest(
+    q_cert: jnp.ndarray,
+    q_due: jnp.ndarray,
+    q_src: jnp.ndarray,
+    q_slot: jnp.ndarray,
+    c_cert: jnp.ndarray,
+    c_due: jnp.ndarray,
+    c_src: jnp.ndarray,
+    c_slot: jnp.ndarray,
+    *,
+    tile_w: int = 128,
+    interpret: bool | None = None,
+):
+    """Sparse-control candidate-list ingest into the pending queues.
+
+    Same contract as :func:`repro.kernels.ref.queue_ingest_ref` (all
+    operands numeric — no boolean boundary conversion needed); returns
+    ``(q_cert', q_due', q_src', q_slot')``.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    return _queue_ingest(
+        q_cert,
+        q_due,
+        q_src,
+        q_slot,
+        c_cert,
+        c_due,
+        c_src,
+        c_slot,
+        tile_w=tile_w,
+        interpret=interpret,
+    )
+
+
 __all__ = [
     "edge_scan",
+    "queue_ingest",
     "round_deliver",
     "edge_scan_batched",
     "edge_scan_sharded",

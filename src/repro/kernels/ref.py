@@ -86,6 +86,42 @@ def round_step_ref(
     return q_cert_new, best_cert, best_src, best_slot, take, n_arr, credit_new, active
 
 
+def queue_ingest_ref(
+    q_cert: jnp.ndarray,
+    q_due: jnp.ndarray,
+    q_src: jnp.ndarray,
+    q_slot: jnp.ndarray,
+    c_cert: jnp.ndarray,
+    c_due: jnp.ndarray,
+    c_src: jnp.ndarray,
+    c_slot: jnp.ndarray,
+):
+    """Oracle for :func:`repro.kernels.round_step.queue_ingest`.
+
+    Sparse-control candidate-list ingest: merge the (W, m) candidate
+    block into the (W, C) pending queues and keep the lexicographically
+    smallest C entries per row by (cert, src, due) — worst-certificate-
+    first eviction with the exact tie-break of the engine's
+    ``_queue_push`` merge (stable lexsort: among fully tied keys the
+    earlier column survives, i.e. resident queue entries beat identical
+    fresh candidates).
+
+    Returns ``(q_cert', q_due', q_src', q_slot')``.
+    """
+    m_cert = jnp.concatenate([q_cert, c_cert], axis=1)
+    m_due = jnp.concatenate([q_due, c_due], axis=1)
+    m_src = jnp.concatenate([q_src, c_src], axis=1)
+    m_slot = jnp.concatenate([q_slot, c_slot], axis=1)
+    cap = q_cert.shape[1]
+    keep = jnp.lexsort((m_due, m_src, m_cert), axis=-1)[:, :cap]
+    return (
+        jnp.take_along_axis(m_cert, keep, axis=1),
+        jnp.take_along_axis(m_due, keep, axis=1),
+        jnp.take_along_axis(m_src, keep, axis=1),
+        jnp.take_along_axis(m_slot, keep, axis=1),
+    )
+
+
 def margin_delta_oracle(
     model: StumpModel, xb: jnp.ndarray, t_lo: int, t_hi: int
 ) -> jnp.ndarray:

@@ -24,6 +24,14 @@ resident for exactly one step (no cross-step accumulation). Boolean
 masks cross the kernel boundary as int32 (TPU-friendly); the wrapper
 converts. ``kernels/ref.py::round_step_ref`` is the bit-identical
 pure-jnp oracle (and the engine's ``round_step_impl="ref"`` path).
+
+:func:`queue_ingest` is the sparse-CONTROL-plane companion
+(``EngineConfig.control_plane="sparse"``): instead of scanning a dense
+(W,) broadcast-score vector, it merges an explicit (W, m) candidate
+block — the scattered payload of the (n_dev, k) control all_gather —
+into the pending queues with the same worst-certificate-first
+eviction order, via a loop-free rank-select (see the kernel body) that
+bit-matches the jnp oracle's stable lexsort.
 """
 
 from __future__ import annotations
@@ -90,6 +98,119 @@ def _round_step_kernel(
     active = alive & (credit2 >= 1.0 - 1e-6)
     credit_out_ref[...] = jnp.where(active, credit2 - 1.0, credit2)
     active_ref[...] = active.astype(jnp.int32)
+
+
+def _queue_ingest_kernel(
+    q_cert_ref,
+    q_due_ref,
+    q_src_ref,
+    q_slot_ref,
+    c_cert_ref,
+    c_due_ref,
+    c_src_ref,
+    c_slot_ref,
+    o_cert_ref,
+    o_due_ref,
+    o_src_ref,
+    o_slot_ref,
+):
+    cert = jnp.concatenate([q_cert_ref[...], c_cert_ref[...]], axis=1)  # (tw, n)
+    due = jnp.concatenate([q_due_ref[...], c_due_ref[...]], axis=1)
+    src = jnp.concatenate([q_src_ref[...], c_src_ref[...]], axis=1)
+    slot = jnp.concatenate([q_slot_ref[...], c_slot_ref[...]], axis=1)
+    n = cert.shape[1]
+    cap = q_cert_ref.shape[1]
+
+    # rank-select instead of an in-kernel sort: with the column position
+    # as the final tie-break the lex key (cert, src, due, position) is a
+    # TOTAL order, so "rank = number of strict predecessors" is a
+    # permutation of 0..n-1 that bit-matches the stable
+    # lexsort((due, src, cert)) of the jnp oracle. One (n, n) pairwise
+    # comparison per row, all VPU-friendly elementwise + reduction work.
+    a_cert, b_cert = cert[:, :, None], cert[:, None, :]
+    a_src, b_src = src[:, :, None], src[:, None, :]
+    a_due, b_due = due[:, :, None], due[:, None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    cert_eq = a_cert == b_cert
+    src_eq = a_src == b_src
+    lt = (
+        (a_cert < b_cert)
+        | (cert_eq & (a_src < b_src))
+        | (cert_eq & src_eq & (a_due < b_due))
+        | (cert_eq & src_eq & (a_due == b_due) & (ii < jj)[None])
+    )
+    rank = jnp.sum(lt.astype(jnp.int32), axis=1)  # (tw, n) predecessors of col j
+
+    # scatter-by-rank: output column c takes the unique element of rank
+    # c (one-hot select + sum — exact for ints and for +inf certs)
+    sel = rank[:, None, :] == jax.lax.broadcasted_iota(jnp.int32, (1, cap, n), 1)
+    o_cert_ref[...] = jnp.sum(jnp.where(sel, cert[:, None, :], 0.0), axis=2)
+    o_due_ref[...] = jnp.sum(jnp.where(sel, due[:, None, :], 0), axis=2)
+    o_src_ref[...] = jnp.sum(jnp.where(sel, src[:, None, :], 0), axis=2)
+    o_slot_ref[...] = jnp.sum(jnp.where(sel, slot[:, None, :], 0), axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_w", "interpret"))
+def queue_ingest(
+    q_cert: jnp.ndarray,
+    q_due: jnp.ndarray,
+    q_src: jnp.ndarray,
+    q_slot: jnp.ndarray,
+    c_cert: jnp.ndarray,
+    c_due: jnp.ndarray,
+    c_src: jnp.ndarray,
+    c_slot: jnp.ndarray,
+    *,
+    tile_w: int = 128,
+    interpret: bool = True,
+):
+    """Sparse-control candidate-list ingest: merge the (W, m) candidate
+    block into the (W, C) pending queues, keeping the lexicographically
+    smallest C per row by (cert, src, due) — worst-certificate-first
+    eviction. Bit-identical to ``kernels/ref.py::queue_ingest_ref``
+    (pinned in tests/test_kernels.py).
+
+    Args:
+        q_cert/q_due/q_src/q_slot: (W, C) PendingQueue leaves.
+        c_cert/c_due/c_src/c_slot: (W, m) candidate block — +inf cert /
+            due -1 marks an invalid (padded or self/OOB) candidate.
+        tile_w: destination rows per grid step.
+        interpret: interpret mode (CPU container); False on a real TPU.
+
+    Returns ``(q_cert', q_due', q_src', q_slot')``, each (W, C).
+    """
+    w, cap = q_cert.shape
+    m = c_cert.shape[1]
+    w_pad = -w % tile_w
+    if w_pad:
+        q_cert = jnp.pad(q_cert, ((0, w_pad), (0, 0)), constant_values=jnp.inf)
+        q_due = jnp.pad(q_due, ((0, w_pad), (0, 0)), constant_values=-1)
+        q_src = jnp.pad(q_src, ((0, w_pad), (0, 0)))
+        q_slot = jnp.pad(q_slot, ((0, w_pad), (0, 0)))
+        c_cert = jnp.pad(c_cert, ((0, w_pad), (0, 0)), constant_values=jnp.inf)
+        c_due = jnp.pad(c_due, ((0, w_pad), (0, 0)), constant_values=-1)
+        c_src = jnp.pad(c_src, ((0, w_pad), (0, 0)))
+        c_slot = jnp.pad(c_slot, ((0, w_pad), (0, 0)))
+    steps = q_cert.shape[0] // tile_w
+
+    row = lambda i: (i, 0)  # noqa: E731
+    queue_spec = pl.BlockSpec((tile_w, cap), row)
+    cand_spec = pl.BlockSpec((tile_w, m), row)
+    out = pl.pallas_call(
+        _queue_ingest_kernel,
+        grid=(steps,),
+        in_specs=[queue_spec] * 4 + [cand_spec] * 4,
+        out_specs=[queue_spec] * 4,
+        out_shape=[
+            jax.ShapeDtypeStruct((w + w_pad, cap), jnp.float32),
+            jax.ShapeDtypeStruct((w + w_pad, cap), jnp.int32),
+            jax.ShapeDtypeStruct((w + w_pad, cap), jnp.int32),
+            jax.ShapeDtypeStruct((w + w_pad, cap), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_cert, q_due, q_src, q_slot, c_cert, c_due, c_src, c_slot)
+    return tuple(a[:w] for a in out)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "tile_w", "interpret"))

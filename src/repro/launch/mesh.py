@@ -73,18 +73,35 @@ ICI_BW = 50e9  # B/s per link
 DCN_BW = 12.5e9  # B/s
 
 
-def ici_round_seconds(gossip_bytes_per_round: int, bandwidth: float = ICI_BW) -> float:
+def ici_round_seconds(
+    gossip_bytes_per_round: int,
+    bandwidth: float = ICI_BW,
+    control_bytes_per_round: int = 0,
+) -> float:
     """Lower-bound wire seconds one gossip round would spend on a single
     ICI link, from the engine's logical ``gossip_bytes_per_round``.
 
-    A derived estimate for benchmark reporting (dense vs gated gossip),
-    not a measurement — the ROADMAP's real-interconnect item is about
-    replacing this with profiler traces on hardware."""
-    return float(gossip_bytes_per_round) / float(bandwidth)
+    ``control_bytes_per_round`` adds the control-plane exchange
+    (certificates/flags/ids) when the caller reports the two planes
+    separately — pass 0 (default) when the gossip figure already
+    includes it, as ``SimResult.gossip_bytes_per_round`` does.
+
+    A derived estimate for benchmark reporting (dense vs gated gossip,
+    dense vs sparse control), not a measurement — the ROADMAP's
+    real-interconnect item is about replacing this with profiler traces
+    on hardware."""
+    return float(gossip_bytes_per_round + control_bytes_per_round) / float(bandwidth)
 
 
-def dcn_round_seconds(dcn_bytes_per_round: int, bandwidth: float = DCN_BW) -> float:
+def dcn_round_seconds(
+    dcn_bytes_per_round: int,
+    bandwidth: float = DCN_BW,
+    control_bytes_per_round: int = 0,
+) -> float:
     """Lower-bound wire seconds per round on the cross-pod DCN tier,
-    from the pod-mesh engine's amortized ``gossip_bytes_per_round_dcn``.
+    from the pod-mesh engine's amortized ``gossip_bytes_per_round_dcn``
+    (plus, optionally, a separately-reported control-plane share).
     Same derived-not-measured formula as the ICI tier, at DCN bandwidth."""
-    return ici_round_seconds(dcn_bytes_per_round, bandwidth)
+    return ici_round_seconds(
+        dcn_bytes_per_round, bandwidth, control_bytes_per_round=control_bytes_per_round
+    )

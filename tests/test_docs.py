@@ -125,6 +125,26 @@ class TestConfigReference:
         for leg in re.findall(r"- name: ([\w-]+)\n\s+gossip_mode", wf):
             assert f"`{leg}`" in doc, f"CI matrix leg {leg!r} missing from docs/config.md"
 
+    def test_control_plane_documented_and_wired_into_ci(self):
+        """The control-plane knob row must name both values, and the CI
+        matrix must actually steer it — a renamed env var or a dropped
+        matrix key fails here, not in a nightly surprise."""
+        doc = self._doc()
+        row = next(
+            (ln for ln in doc.splitlines() if ln.strip().startswith("| `control_plane`")),
+            None,
+        )
+        assert row is not None, "docs/config.md lost the `control_plane` knob row"
+        assert "dense" in row and "sparse" in row
+        wf = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+        assert "REPRO_CONTROL_PLANE" in wf, (
+            "ci.yml no longer sets REPRO_CONTROL_PLANE — the sparse-control "
+            "matrix leg is not steering the engines"
+        )
+        assert "control_plane: sparse" in wf, (
+            "ci.yml lost the sparse-control matrix leg"
+        )
+
 
 # ---------------------------------------------------------------------------
 # README quickstart

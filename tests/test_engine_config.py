@@ -27,6 +27,7 @@ INT_KNOBS = [
 ALL_VARS = [v for v, _, _ in INT_KNOBS] + [
     "REPRO_GOSSIP_MODE",
     "REPRO_ROUND_STEP_IMPL",
+    "REPRO_CONTROL_PLANE",
 ]
 
 
@@ -120,6 +121,61 @@ class TestRoundStepImplOverride:
             make_engine(_StubWorker(), EngineConfig(n_workers=2))
 
 
+class TestControlPlaneOverride:
+    def test_unset_defaults_dense(self):
+        assert EngineConfig().control_plane == "dense"
+
+    def test_env_value_becomes_default(self, monkeypatch):
+        monkeypatch.setenv("REPRO_CONTROL_PLANE", "sparse")
+        assert EngineConfig().control_plane == "sparse"
+
+    def test_empty_falls_back(self, monkeypatch):
+        monkeypatch.setenv("REPRO_CONTROL_PLANE", "  ")
+        assert EngineConfig().control_plane == "dense"
+
+    def test_explicit_arg_beats_env(self, monkeypatch):
+        monkeypatch.setenv("REPRO_CONTROL_PLANE", "sparse")
+        assert EngineConfig(control_plane="dense").control_plane == "dense"
+
+    def test_invalid_plane_rejected_at_engine_construction(self, monkeypatch):
+        monkeypatch.setenv("REPRO_CONTROL_PLANE", "topk")
+        cfg = EngineConfig(n_workers=2)
+        assert cfg.control_plane == "topk"  # parsing is permissive ...
+        with pytest.raises(ValueError, match="control_plane"):
+            make_engine(_StubWorker(), cfg)  # ... construction is not
+
+
+class TestAutoCapacityKnob:
+    """`inflight_capacity` is an int knob with one special string value:
+    "auto" (case-insensitive via the env layer) defers sizing to the
+    warm-up occupancy probe."""
+
+    @pytest.mark.parametrize("raw", ["auto", "AUTO", " Auto "])
+    def test_env_auto_becomes_default(self, raw, monkeypatch):
+        monkeypatch.setenv("REPRO_INFLIGHT_CAPACITY", raw)
+        assert EngineConfig().inflight_capacity == "auto"
+
+    def test_explicit_auto_constructs(self):
+        TMSNEngine(_StubWorker(), EngineConfig(n_workers=2, inflight_capacity="auto"))
+
+    def test_explicit_int_beats_env_auto(self, monkeypatch):
+        monkeypatch.setenv("REPRO_INFLIGHT_CAPACITY", "auto")
+        assert EngineConfig(inflight_capacity=4).inflight_capacity == 4
+
+    def test_malformed_near_auto_still_raises(self, monkeypatch):
+        """"auto" is the ONLY special value — anything else non-integer
+        stays a malformed-int error naming the variable."""
+        monkeypatch.setenv("REPRO_INFLIGHT_CAPACITY", "autox")
+        with pytest.raises(ValueError, match="REPRO_INFLIGHT_CAPACITY"):
+            EngineConfig()
+
+    def test_other_strings_rejected_at_engine_construction(self):
+        with pytest.raises(ValueError, match="inflight_capacity"):
+            TMSNEngine(
+                _StubWorker(), EngineConfig(n_workers=2, inflight_capacity="big")
+            )
+
+
 class TestKnobValidation:
     """Range checks fire at engine construction for env and explicit
     values alike."""
@@ -152,6 +208,7 @@ def test_every_env_knob_is_a_config_field():
     for _, field, _ in INT_KNOBS:
         assert field in fields
     assert "gossip_mode" in fields
+    assert "control_plane" in fields
 
 
 class _StubWorker:

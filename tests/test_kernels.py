@@ -12,6 +12,7 @@ from repro.kernels import ops
 from repro.kernels.ref import (
     edge_scan_ref,
     margin_delta_oracle,
+    queue_ingest_ref,
     round_step_ref,
     weight_update_ref,
 )
@@ -238,6 +239,104 @@ class TestRoundStepKernel:
         assert not bool(out[4].any())  # no take
         assert int(out[5].sum()) == 0  # no arrivals
         assert bool(out[7].all())  # every alive worker is credit-active
+
+
+def _ingest_inputs(key, w, cap, m, fill=0.6):
+    """Random occupied queues + a candidate block: finite certs mark
+    occupied/valid entries, +inf the empty/invalid ones (the engine's
+    OOB-padded candidates arrive exactly like this)."""
+    ks = jax.random.split(key, 8)
+    q_cert = jnp.where(
+        jax.random.uniform(ks[0], (w, cap)) < fill,
+        -jax.random.uniform(ks[1], (w, cap)) - 0.01,
+        jnp.inf,
+    )
+    q_due = jax.random.randint(ks[2], (w, cap), 0, 6, dtype=jnp.int32)
+    q_src = jax.random.randint(ks[3], (w, cap), 0, w, dtype=jnp.int32)
+    q_slot = jax.random.randint(ks[4], (w, cap), 0, 3, dtype=jnp.int32)
+    c_cert = jnp.where(
+        jax.random.uniform(ks[5], (w, m)) < fill,
+        -jax.random.uniform(ks[6], (w, m)) - 0.01,
+        jnp.inf,
+    )
+    c_due = jax.random.randint(ks[7], (w, m), 0, 6, dtype=jnp.int32)
+    c_src = jax.random.randint(ks[0], (w, m), 0, w, dtype=jnp.int32)
+    c_slot = jax.random.randint(ks[1], (w, m), 0, 3, dtype=jnp.int32)
+    return q_cert, q_due, q_src, q_slot, c_cert, c_due, c_src, c_slot
+
+
+class TestQueueIngestKernel:
+    """Fused sparse-control candidate-list ingest vs the jnp oracle.
+    Pure comparison/permutation logic, so assertions are array_equal."""
+
+    @pytest.mark.parametrize("w", [1, 7, 128, 200])
+    @pytest.mark.parametrize("cap,m", [(1, 1), (4, 3), (8, 16), (32, 8)])
+    def test_matches_ref(self, w, cap, m):
+        args = _ingest_inputs(jax.random.PRNGKey(w * 31 + cap + m), w, cap, m)
+        ref = queue_ingest_ref(*args)
+        got = ops.queue_ingest(*args, interpret=True)
+        for name, a, b in zip(["cert", "due", "src", "slot"], ref, got):
+            assert a.dtype == b.dtype, name
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+    def test_tile_size_invariance_and_padding(self):
+        """w not a multiple of tile_w pads rows; padded rows must not
+        leak into the trimmed outputs."""
+        args = _ingest_inputs(jax.random.PRNGKey(5), 100, 6, 8)
+        outs = [
+            ops.queue_ingest(*args, tile_w=tw, interpret=True)
+            for tw in (8, 64, 256)
+        ]
+        for got in outs[1:]:
+            for a, b in zip(outs[0], got):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_no_valid_candidates_is_a_noop(self):
+        """An all-invalid (+inf) candidate block must leave every
+        OCCUPIED queue entry bitwise unchanged — the engine relies on
+        this every round no device improves. Fully-occupied queues make
+        the claim exact (empty +inf slots may swap their garbage for
+        the candidates' +inf padding, which delivery can never match)."""
+        w, cap, m = 9, 4, 5
+        q_cert, q_due, q_src, q_slot, *_ = _ingest_inputs(
+            jax.random.PRNGKey(11), w, cap, m, fill=1.0
+        )
+        # a fully occupied queue sorts to itself only when already in
+        # (cert, src, due) order — pre-sort so the no-op claim is exact
+        order = jnp.lexsort((q_due, q_src, q_cert), axis=-1)
+        q_cert = jnp.take_along_axis(q_cert, order, axis=1)
+        q_due = jnp.take_along_axis(q_due, order, axis=1)
+        q_src = jnp.take_along_axis(q_src, order, axis=1)
+        q_slot = jnp.take_along_axis(q_slot, order, axis=1)
+        empty = (
+            jnp.full((w, m), jnp.inf),
+            jnp.zeros((w, m), jnp.int32),
+            jnp.full((w, m), -1, jnp.int32),
+            jnp.zeros((w, m), jnp.int32),
+        )
+        got = ops.queue_ingest(q_cert, q_due, q_src, q_slot, *empty, interpret=True)
+        for a, b in zip((q_cert, q_due, q_src, q_slot), got):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_worst_first_eviction_keeps_best(self):
+        """Overflow keeps the lexicographically smallest (cert, src,
+        due) entries across queue + candidates."""
+        q_cert = jnp.asarray([[-1.0, -3.0]], jnp.float32)
+        q_due = jnp.asarray([[4, 4]], jnp.int32)
+        q_src = jnp.asarray([[2, 5]], jnp.int32)
+        q_slot = jnp.asarray([[0, 1]], jnp.int32)
+        c_cert = jnp.asarray([[-2.0, jnp.inf]], jnp.float32)
+        c_due = jnp.asarray([[6, 0]], jnp.int32)
+        c_src = jnp.asarray([[7, -1]], jnp.int32)
+        c_slot = jnp.asarray([[2, 0]], jnp.int32)
+        cert, due, src, slot = ops.queue_ingest(
+            q_cert, q_due, q_src, q_slot, c_cert, c_due, c_src, c_slot,
+            interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(cert), [[-3.0, -2.0]])
+        np.testing.assert_array_equal(np.asarray(src), [[5, 7]])
+        np.testing.assert_array_equal(np.asarray(due), [[4, 6]])
+        np.testing.assert_array_equal(np.asarray(slot), [[1, 2]])
 
 
 class TestKernelScannerEquivalence:

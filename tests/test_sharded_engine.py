@@ -148,20 +148,26 @@ class TestToyEquivalence:
     def test_link_delay_matrix_identical(self):
         w = 8
         delays = quantize_latency(0.05, 0.02, 0.05, w, seed=1)
-        # pinned dense: under heterogeneous delays gated gossip is an
-        # explicit approximation, and this test asserts strict equality
+        # pinned dense (both planes): under heterogeneous delays gated
+        # gossip AND the sparse control plane are explicit
+        # approximations, and this test asserts strict equality
         res1, res8 = _run_pair(
             [1, 2] * (w // 2), [0.05 * (i + 1) for i in range(w)],
             delay_rounds=delays, max_rounds=25, gossip_mode="dense",
+            control_plane="dense",
         )
         assert res8.final_certificates == res1.final_certificates
         assert res8.messages_sent == res1.messages_sent
         assert res8.messages_discarded == res1.messages_discarded
 
     def test_gossip_bytes_reported(self):
-        # pinned dense: the CI matrix also runs the tier with
-        # REPRO_GOSSIP_MODE=gated, which would change the footprint
-        _, res8 = _run_pair([1] * 8, [0.1] * 8, max_rounds=5, gossip_mode="dense")
+        # pinned dense (both planes): the CI matrix also runs the tier
+        # with REPRO_GOSSIP_MODE=gated / REPRO_CONTROL_PLANE=sparse,
+        # either of which would change the footprint
+        _, res8 = _run_pair(
+            [1] * 8, [0.1] * 8, max_rounds=5, gossip_mode="dense",
+            control_plane="dense",
+        )
         # all_gather of payload (8B) + f32 cert + fired flag, per worker
         assert res8.gossip_bytes_per_round == 8 * (8 + 4 + 1)
         assert res8.gossip_mode == "dense"
@@ -200,7 +206,10 @@ class TestGatedGossip:
 
     def test_gated_equals_dense_uniform_delay(self):
         period, dec = self._workload()
-        resd, resg = _run_modes(period, dec, max_rounds=30)
+        # pinned dense control: under sparse control both gossip modes
+        # push only candidate triples, so the strict traffic inequality
+        # below would collapse to equality
+        resd, resg = _run_modes(period, dec, max_rounds=30, control_plane="dense")
         assert resg.final_certificates == resd.final_certificates
         assert resg.history == resd.history
         # the gate is what shrinks traffic: strictly fewer pushes (on a
@@ -237,7 +246,10 @@ class TestGatedGossip:
 
     def test_gated_bytes_accounting(self):
         period, dec = self._workload()
-        resd, resg = _run_modes(period, dec, max_rounds=5)
+        # pinned dense control: these are the dense-control-plane byte
+        # formulas (sparse control has its own accounting test in
+        # tests/test_sparse_inflight.py)
+        resd, resg = _run_modes(period, dec, max_rounds=5, control_plane="dense")
         w = self.W
         n_dev = _mesh_for(w).shape["workers"]
         p = 8  # toy payload
@@ -249,10 +261,12 @@ class TestGatedGossip:
         period, dec = self._workload()
         w = self.W
         n_dev = _mesh_for(w).shape["workers"]
+        # pinned dense control throughout: the byte formula and the
+        # strict messages_sent equality below are dense-control facts
         eng = make_engine(
             ShardableToyWorker(period, dec),
             EngineConfig(n_workers=w, mesh=_mesh_for(w), gossip_mode="gated",
-                         gossip_top_k=3, max_rounds=10),
+                         gossip_top_k=3, max_rounds=10, control_plane="dense"),
         )
         res = eng.run()
         assert res.gossip_bytes_per_round == w * 5 + n_dev * 3 * (8 + 4)
@@ -261,12 +275,12 @@ class TestGatedGossip:
         resd = make_engine(
             ShardableToyWorker(period, dec),
             EngineConfig(n_workers=w, mesh=_mesh_for(w), gossip_mode="dense",
-                         max_rounds=10),
+                         max_rounds=10, control_plane="dense"),
         ).run()
         full = make_engine(
             ShardableToyWorker(period, dec),
             EngineConfig(n_workers=w, mesh=_mesh_for(w), gossip_mode="gated",
-                         gossip_top_k=w, max_rounds=10),
+                         gossip_top_k=w, max_rounds=10, control_plane="dense"),
         ).run()
         assert full.final_certificates == resd.final_certificates
         assert full.messages_sent == resd.messages_sent
@@ -440,10 +454,12 @@ class TestPodMesh:
         wpp = pod_mesh.shape["workers"]
         w_pod = w // pod_mesh.shape["pod"]
         p = 8  # toy payload
+        # pinned dense control: these are the dense-control tier formulas
         res = make_engine(
             ShardableToyWorker(period, dec),
             EngineConfig(n_workers=w, mesh=pod_mesh, max_rounds=10,
-                         gossip_mode="dense", cross_pod_every_k=4, cross_pod_top_k=2),
+                         gossip_mode="dense", cross_pod_every_k=4,
+                         cross_pod_top_k=2, control_plane="dense"),
         ).run()
         # intra tier: dense all_gather of the POD's workers only
         assert res.gossip_bytes_per_round_ici == w_pod * (p + 4 + 1)
@@ -457,7 +473,8 @@ class TestPodMesh:
         gated = make_engine(
             ShardableToyWorker(period, dec),
             EngineConfig(n_workers=w, mesh=pod_mesh, max_rounds=10,
-                         gossip_mode="gated", cross_pod_every_k=4, cross_pod_top_k=2),
+                         gossip_mode="gated", cross_pod_every_k=4,
+                         cross_pod_top_k=2, control_plane="dense"),
         ).run()
         assert gated.gossip_bytes_per_round_ici == w_pod * 5 + wpp * 1 * (p + 4)
         # counter split: every push is attributed to exactly one tier
@@ -585,7 +602,8 @@ class TestSparrowEquivalence:
         cfg = _sparrow_cfg(w)
         # pinned dense: strict traffic equality vs the single-device
         # engine (the gated CI leg would push fewer at W_local > 1)
-        ecfg = dict(n_workers=w, max_rounds=50, seed=0, gossip_mode="dense")
+        ecfg = dict(n_workers=w, max_rounds=50, seed=0, gossip_mode="dense",
+                    control_plane="dense")
         res1 = TMSNEngine(BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg)).run()
         res8 = make_engine(
             BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg, mesh=_mesh_for(w))
@@ -600,7 +618,8 @@ class TestSparrowEquivalence:
         xtr, ytr, _, _ = small_data
         w = 4
         cfg = _sparrow_cfg(w, ess_threshold=0.9)
-        ecfg = dict(n_workers=w, max_rounds=40, seed=0, gossip_mode="dense")
+        ecfg = dict(n_workers=w, max_rounds=40, seed=0, gossip_mode="dense",
+                    control_plane="dense")
         res1 = TMSNEngine(BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg)).run()
         res8 = make_engine(
             BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg, mesh=_mesh_for(w))
@@ -619,7 +638,7 @@ class TestSparrowEquivalence:
         delays = quantize_latency(0.05, 0.02, 0.05, w, seed=1)
         ecfg = dict(
             n_workers=w, delay_rounds=delays, speed=speed, fail_round=fail,
-            max_rounds=40, seed=0, gossip_mode="dense",
+            max_rounds=40, seed=0, gossip_mode="dense", control_plane="dense",
         )
         res1 = TMSNEngine(BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg)).run()
         res8 = make_engine(
@@ -638,7 +657,8 @@ class TestSparrowEquivalence:
             capacity=16,
             scanner=ScannerConfig(chunk_size=128, num_bins=8, gamma0=0.25, use_kernel=True),
         )
-        ecfg = dict(n_workers=w, max_rounds=12, seed=0, gossip_mode="dense")
+        ecfg = dict(n_workers=w, max_rounds=12, seed=0, gossip_mode="dense",
+                    control_plane="dense")
         res1 = TMSNEngine(BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg)).run()
         res8 = make_engine(
             BatchedSparrowWorker(xtr, ytr, cfg), EngineConfig(**ecfg, mesh=_mesh_for(w))

@@ -126,9 +126,12 @@ class TestOverflow:
     def test_small_capacity_accounting_exact(self):
         """C=1 at uniform delay: the global min survives worst-first
         eviction so certificates/history still match, and every dropped
-        candidate is accounted (discards shift to push time)."""
-        d = _run(0)
-        s = _run(1)
+        candidate is accounted (discards shift to push time). Pinned to
+        dense control: sparse control ships only top-k candidates, so a
+        C=1 queue never overflows and the premise (evictions happen)
+        would not hold under the sparse-control CI leg."""
+        d = _run(0, control_plane="dense")
+        s = _run(1, control_plane="dense")
         assert s.final_certificates == d.final_certificates
         assert s.history == d.history
         assert s.messages_evicted > 0
@@ -231,6 +234,226 @@ class TestPodMesh:
         d = _run(0, mesh=mesh, **kw)
         s = _run(64, mesh=mesh, **kw)
         _assert_identical(d, s)
+
+
+def _assert_same_protocol(dense, sparse):
+    """Cross-CONTROL-PLANE contract: the protocol outcome (certificates,
+    history, rounds, adoptions) is identical under uniform delay, but
+    `messages_sent`/`messages_discarded` are deliberately NOT compared —
+    sparse control never puts suppressed runner-ups on the wire, so
+    those counters legitimately shrink (docs/architecture.md)."""
+    assert sparse.final_certificates == dense.final_certificates
+    assert sparse.history == dense.history
+    assert sparse.rounds == dense.rounds
+    assert sparse.messages_accepted == dense.messages_accepted
+
+
+class TestControlPlane:
+    """`control_plane="sparse"` (top-k candidate triples instead of the
+    dense certs/flags exchange) vs dense control, on every substrate ×
+    both in-flight representations. Uniform delay throughout: that is
+    the exactness regime; het delay is `bench_scaling.py`'s measured
+    territory."""
+
+    @pytest.mark.parametrize("cap", [0, 8])
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_single_device_identical(self, cap, impl):
+        d = _run(cap, impl=impl)
+        s = _run(cap, impl=impl, control_plane="sparse")
+        _assert_same_protocol(d, s)
+        assert s.control_plane == "sparse"
+
+    def test_single_device_het_speeds_failstop_identical(self):
+        """Laggard speeds + a fail-stop + nonzero eps (still uniform
+        delay — the sparse-control exactness precondition)."""
+        for cap in (0, 64):
+            d = _run(cap, **HET)
+            s = _run(cap, control_plane="sparse", **HET)
+            _assert_same_protocol(d, s)
+
+    def test_top_k_wider_than_improvers_identical(self):
+        _assert_same_protocol(
+            _run(0, gossip_top_k=3), _run(0, gossip_top_k=3, control_plane="sparse")
+        )
+
+    @pytest.mark.skipif(
+        not sharded_engine_available(),
+        reason="sharded control-plane tests need >=2 devices",
+    )
+    @pytest.mark.parametrize("mode", ["dense", "gated"])
+    @pytest.mark.parametrize("cap", [0, 64])
+    def test_sharded_identical(self, mode, cap):
+        mesh = make_worker_mesh()
+        d = _run(cap, mesh=mesh, gossip_mode=mode, **HET)
+        s = _run(cap, mesh=mesh, gossip_mode=mode, control_plane="sparse", **HET)
+        _assert_same_protocol(d, s)
+
+    @pytest.mark.skipif(
+        not sharded_engine_available(),
+        reason="sharded control-plane tests need >=2 devices",
+    )
+    def test_control_bytes_accounting(self):
+        """The reported control-plane footprint is the exact formula:
+        dense W_tier·5 (f32 cert + bool flag per worker), sparse
+        n_dev·k·12 ((cert, id, round) triples) — and the single-device
+        engine reports 0 (no wire)."""
+        mesh = make_worker_mesh()
+        n_dev = len(jax.devices())
+        d = _run(0, mesh=mesh, gossip_mode="gated", control_plane="dense")
+        s = _run(0, mesh=mesh, gossip_mode="gated", control_plane="sparse")
+        assert d.control_bytes_per_round == W * 5
+        assert s.control_bytes_per_round == n_dev * 1 * 12
+        assert d.control_plane == "dense"
+        local = _run(0, control_plane="sparse")
+        assert local.control_bytes_per_round == 0
+
+    @pytest.mark.skipif(
+        len(jax.devices()) < 4 or len(jax.devices()) % 2,
+        reason="pod-mesh control-plane tests need an even device count >= 4",
+    )
+    @pytest.mark.parametrize("mode", ["dense", "gated"])
+    @pytest.mark.parametrize("cap", [0, 64])
+    def test_pod_mesh_identical(self, mode, cap):
+        mesh = make_worker_mesh(pods=2)
+        kw = dict(gossip_mode=mode, cross_pod_every_k=2, cross_pod_top_k=2)
+        d = _run(cap, mesh=mesh, **kw)
+        s = _run(cap, mesh=mesh, control_plane="sparse", **kw)
+        _assert_same_protocol(d, s)
+
+    def test_single_device_matches_sharded_sparse_control(self):
+        """Sparse control composes with the sharded/unsharded
+        equivalence chain: the same config lands on the same protocol
+        outcome on both substrates."""
+        a = _run(8, control_plane="sparse")
+        if not sharded_engine_available():
+            pytest.skip("needs >=2 devices for the sharded half")
+        b = _run(8, mesh=make_worker_mesh(), gossip_mode="gated",
+                 control_plane="sparse")
+        assert b.final_certificates == a.final_certificates
+        assert b.history == a.history
+
+
+class TestControlPlaneWorkers:
+    """Sparse vs dense control under the PRODUCTION workers (real
+    payload rings, adoptions, resamples) — Sparrow and the TMSN-SGD
+    transformer."""
+
+    @pytest.fixture(scope="class")
+    def small_data(self):
+        xb, y, _ = make_splice_like(SpliceConfig(n=20_000, d=16, num_bins=8, seed=3))
+        return train_test_split(xb, y)
+
+    def _sparrow(self, small_data, w):
+        xtr, ytr, _, _ = small_data
+        cfg = SparrowConfig(
+            sample_size=256,
+            capacity=16,
+            scanner=ScannerConfig(chunk_size=128, num_bins=8, gamma0=0.25),
+            n_workers=w,
+        )
+        return BatchedSparrowWorker(xtr, ytr, cfg)
+
+    @pytest.mark.parametrize("cap", [0, 16])
+    def test_sparrow_identical(self, small_data, cap):
+        w = 4
+        runs = {}
+        for plane in ("dense", "sparse"):
+            runs[plane] = _run(
+                cap, w=w, worker=self._sparrow(small_data, w),
+                control_plane=plane, max_rounds=12, seed=0,
+            )
+        _assert_same_protocol(runs["dense"], runs["sparse"])
+
+    @pytest.mark.skipif(
+        not sharded_engine_available(),
+        reason="sharded Sparrow control-plane test needs >=2 devices",
+    )
+    def test_sparrow_sharded_gated_identical(self, small_data):
+        w = 8
+        mesh = make_worker_mesh()
+        runs = {}
+        for plane in ("dense", "sparse"):
+            runs[plane] = _run(
+                16, w=w, worker=self._sparrow(small_data, w), mesh=mesh,
+                gossip_mode="gated", control_plane=plane, max_rounds=12, seed=0,
+            )
+        _assert_same_protocol(runs["dense"], runs["sparse"])
+
+    def test_sgd_identical(self):
+        from test_worker_contract import _sgd_worker
+
+        runs = {}
+        for plane in ("dense", "sparse"):
+            runs[plane] = _run(
+                0, w=4, worker=_sgd_worker(), control_plane=plane,
+                max_rounds=8, seed=0,
+            )
+        _assert_same_protocol(runs["dense"], runs["sparse"])
+
+    @pytest.mark.skipif(
+        not sharded_engine_available(),
+        reason="sharded SGD control-plane test needs >=2 devices",
+    )
+    def test_sgd_sharded_gated_identical(self):
+        from test_worker_contract import _sgd_worker
+
+        mesh = make_worker_mesh()
+        runs = {}
+        for plane in ("dense", "sparse"):
+            runs[plane] = _run(
+                8, w=8, worker=_sgd_worker(), mesh=mesh, gossip_mode="gated",
+                control_plane=plane, max_rounds=8, seed=0,
+            )
+        _assert_same_protocol(runs["dense"], runs["sparse"])
+
+
+class TestAutoCapacity:
+    """`inflight_capacity="auto"`: a warm-up occupancy probe sizes the
+    pending queues (peak × headroom), the choice lands in
+    `SimResult.inflight_capacity_selected`, and the run is bit-identical
+    to an explicit-capacity rerun AND to the dense oracle."""
+
+    def test_auto_selects_and_matches_explicit(self):
+        delays = quantize_latency(0.05, 0.02, 0.01, W, seed=0)
+        auto = _run("auto", delay_rounds=delays, **HET)
+        sel = auto.inflight_capacity_selected
+        assert sel > 0
+        explicit = _run(sel, delay_rounds=delays, **HET)
+        assert explicit.inflight_capacity_selected == 0  # explicit: not auto
+        assert auto.final_certificates == explicit.final_certificates
+        assert auto.history == explicit.history
+        assert auto.messages_evicted == explicit.messages_evicted == 0
+
+    def test_auto_exact_vs_dense_oracle(self):
+        delays = quantize_latency(0.05, 0.02, 0.01, W, seed=0)
+        d = _run(0, delay_rounds=delays, **HET)
+        a = _run("auto", delay_rounds=delays, **HET)
+        _assert_identical(d, a)
+
+    def test_auto_via_env_var(self, monkeypatch):
+        monkeypatch.setenv("REPRO_INFLIGHT_CAPACITY", "auto")
+        cfg = EngineConfig(n_workers=W, max_rounds=30)
+        assert cfg.inflight_capacity == "auto"
+        res = make_engine(_toy(), cfg).run()
+        assert res.inflight_capacity_selected > 0
+        _assert_identical(_run(0), res)
+
+    @pytest.mark.skipif(
+        not sharded_engine_available(),
+        reason="sharded auto-capacity test needs >=2 devices",
+    )
+    def test_auto_sharded_with_sparse_control(self):
+        """The CI sparse-control leg's exact combination: gated gossip +
+        sparse control + auto capacity on the sharded engine."""
+        mesh = make_worker_mesh()
+        kw = dict(mesh=mesh, gossip_mode="gated", control_plane="sparse")
+        d = _run(0, gossip_mode="gated", mesh=mesh, **HET)
+        a = _run("auto", **kw, **HET)
+        assert a.inflight_capacity_selected > 0
+        _assert_same_protocol(d, a)
+        explicit = _run(a.inflight_capacity_selected, **kw, **HET)
+        assert a.final_certificates == explicit.final_certificates
+        assert a.history == explicit.history
 
 
 class TestSparrow:
