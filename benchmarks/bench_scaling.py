@@ -256,6 +256,8 @@ def _sharded_child(
     mem_gb: int = 0,
     worker_kind: str = "sparrow",
     control_plane: str = "dense",
+    fault_spec: str = "",
+    churn: int = 0,
 ) -> dict:
     """Runs inside the subprocess (forced host devices already in env):
     one shard-mapped engine run of ``rounds`` rounds, timed after a
@@ -268,10 +270,14 @@ def _sharded_child(
     of an allocator-dependent slowdown; ``worker_kind="toy"`` swaps the
     Sparrow worker for :class:`_RoundOnlyWorker` so the wall isolates
     the round machinery; ``control_plane="sparse"`` swaps the dense
-    certs/flags control gather for top-k candidate triples."""
+    certs/flags control gather for top-k candidate triples;
+    ``fault_spec`` injects a FaultPlan (same spec string as
+    REPRO_FAULT_PLAN); ``churn = N`` reserves N spare slots and drives a
+    churn trace — N spares join and N founding workers leave, spread
+    evenly over the middle of the run."""
     import hashlib
 
-    from repro.core.engine import EngineConfig, make_engine, quantize_latency
+    from repro.core.engine import EngineConfig, MembershipPlan, make_engine, quantize_latency
     from repro.launch.mesh import make_worker_mesh
 
     if mem_gb:
@@ -300,6 +306,20 @@ def _sharded_child(
             n_workers=w,
         )
         worker = BatchedSparrowWorker(xtr, ytr, cfg)
+    membership = None
+    if churn:
+        # churn trace: the top `churn` slots are spares that join at
+        # rounds spread over [2, rounds - 2]; the first `churn` founding
+        # workers leave over the same window (join + leave = fail-stop
+        # composition, so the run must complete without deadlock)
+        lo, hi = 2, max(3, rounds - 2)
+        span = max(1, hi - lo)
+        membership = MembershipPlan(
+            joins=tuple(
+                (lo + (i * span) // churn, w - churn + i) for i in range(churn)
+            ),
+            leaves=tuple((lo + (i * span) // churn, i) for i in range(churn)),
+        )
     eng = make_engine(
         worker,
         EngineConfig(
@@ -315,6 +335,9 @@ def _sharded_child(
             inflight_capacity=capacity,
             delay_rounds=delay_rounds,
             control_plane=control_plane,
+            fault_spec=fault_spec,  # explicit: "" pins chaos OFF despite env
+            spare_slots=churn,
+            membership=membership,
         ),
     )
     res = eng.run()  # compile
@@ -343,6 +366,9 @@ def _sharded_child(
         "inflight_occupancy_peak": res.inflight_occupancy_peak,
         "control_plane": res.control_plane,
         "control_bytes_per_round": res.control_bytes_per_round,
+        "messages_dropped_injected": res.messages_dropped_injected,
+        "messages_corrupt_rejected": res.messages_corrupt_rejected,
+        "workers_joined": res.workers_joined,
         "best_cert": min(res.final_certificates),
         # digest of ALL final certs so the parent can check dense/gated
         # end-state identity (uniform delay) without shipping W floats
@@ -361,6 +387,8 @@ def _run_sharded(
     mem_gb: int = 0,
     worker_kind: str = "sparrow",
     control_plane: str = "dense",
+    fault_spec: str = "",
+    churn: int = 0,
     check: bool = True,
     timeout: int = 3600,
 ) -> dict:
@@ -384,7 +412,7 @@ def _run_sharded(
             [sys.executable, "-m", "benchmarks.bench_scaling",
              "--sharded-child", str(w), str(SHARDED_DEVICES), str(rounds), gossip_mode,
              str(pods), str(cross_k), str(capacity), delay_profile, str(mem_gb),
-             worker_kind, control_plane],
+             worker_kind, control_plane, fault_spec, str(churn)],
             env=env,
             cwd=root,
             capture_output=True,
@@ -412,7 +440,7 @@ def _run_sharded(
         raise RuntimeError(
             f"sharded child W={w} ({gossip_mode}, pods={pods}, k={cross_k}, "
             f"capacity={capacity}, delay={delay_profile}, mem_gb={mem_gb}, "
-            f"control={control_plane}) failed:\n"
+            f"control={control_plane}, faults={fault_spec!r}, churn={churn}) failed:\n"
             f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}"
         )
     # the child prints exactly one JSON line last (jax may warn above it)
@@ -815,6 +843,106 @@ def run(quick: bool = False) -> list[str]:
     return lines
 
 
+def run_chaos(quick: bool = False) -> list[str]:
+    """Chaos section: the MEASURED side of the fault/membership suite.
+
+    The exact claims (join@k=1 identity, cross-substrate fault
+    determinism, duplication transparency, corruption soundness) are
+    pinned bit-for-bit in tests/test_chaos.py; what remains is measured
+    here and reported, never assumed:
+
+      * a churn trace at W=256 — 64 spares join while 64 founding
+        workers leave (a quarter of the cluster churning in each
+        direction) — must COMPLETE without deadlock, count exactly 64
+        joins, and its best-certificate gap vs the clean run is the
+        resilience figure;
+      * the CI chaos leg's FaultPlan (drop=3,corrupt=3,seed=9) at
+        W=256: injected-drop / rejected-corruption accounting plus the
+        cert gap the low-rate faults actually cost;
+      * a DCN pod partition on the (2, 4) pod mesh: cross-pod traffic
+        severed for the middle third of the run — the two pods keep
+        gossiping internally, re-merge when the window closes, and the
+        cert gap vs the unpartitioned run measures what the partition
+        cost.
+
+    All runs use the trivial-segment worker (the chaos machinery, not
+    worker compute, is under test), gated gossip, and the sparse
+    pending-queue in-flight state — the large-W configuration the
+    elastic layer exists for."""
+    lines: list[str] = []
+    out: dict = {}
+    w, cap = 256, 64
+    rounds = 24 if quick else 48
+    kw = dict(gossip_mode="gated", capacity=cap, worker_kind="toy")
+
+    clean = _run_sharded(w, rounds, **kw)
+    out["clean"] = clean
+    lines.append(f"chaos.clean_w{w}.wall_ms_per_round,{clean['wall_ms_per_round']:.1f},reference")
+    lines.append(f"chaos.clean_w{w}.best_cert,{clean['best_cert']:.5f},reference")
+
+    # --- churn trace: 64 joins + 64 leaves = a quarter churning each way
+    churn = w // 4
+    res = _run_sharded(w, rounds, churn=churn, **kw)
+    out["churn"] = res
+    if res["workers_joined"] != churn:
+        # join accounting is exact — a miscount is a regression, not noise
+        raise RuntimeError(
+            f"churn trace joined {res['workers_joined']} workers, expected {churn}"
+        )
+    pre = f"chaos.churn_w{w}"
+    gap = abs(res["best_cert"] - clean["best_cert"])
+    out["churn_best_cert_gap"] = gap
+    lines.append(f"{pre}.completed,1,{churn}_join_{churn}_leave_no_deadlock")
+    lines.append(f"{pre}.workers_joined,{res['workers_joined']},exact_accounting")
+    lines.append(f"{pre}.wall_ms_per_round,{res['wall_ms_per_round']:.1f},capacity_{cap}")
+    lines.append(f"{pre}.best_cert_gap_vs_clean,{gap:.5f},measured_divergence")
+
+    # --- the CI chaos leg's fault plan, measured at bench scale ----------
+    spec = "drop=3,corrupt=3,seed=9"
+    res = _run_sharded(w, rounds, fault_spec=spec, **kw)
+    out["faults"] = res
+    if res["messages_dropped_injected"] <= 0 or res["messages_corrupt_rejected"] <= 0:
+        raise RuntimeError(
+            f"fault plan {spec!r} injected nothing "
+            f"(dropped={res['messages_dropped_injected']}, "
+            f"rejected={res['messages_corrupt_rejected']})"
+        )
+    pre = f"chaos.faults_w{w}"
+    gap = abs(res["best_cert"] - clean["best_cert"])
+    out["faults_best_cert_gap"] = gap
+    tag = spec.replace("=", "").replace(",", "_")  # CSV derived col: no commas
+    lines.append(f"{pre}.messages_dropped_injected,{res['messages_dropped_injected']},{tag}")
+    lines.append(f"{pre}.messages_corrupt_rejected,{res['messages_corrupt_rejected']},eps_gate_soundness")
+    lines.append(f"{pre}.best_cert_gap_vs_clean,{gap:.5f},measured_divergence")
+
+    # --- DCN pod partition: cross-pod tier severed mid-run ----------------
+    pod_kw = dict(pods=2, cross_k=1, **kw)
+    part_lo, part_hi = rounds // 3, 2 * rounds // 3
+    pod_clean = _run_sharded(w, rounds, **pod_kw)
+    pod_part = _run_sharded(
+        w, rounds, fault_spec=f"part={part_lo}:{part_hi},seed=9", **pod_kw
+    )
+    out["pod_clean"] = pod_clean
+    out["pod_partition"] = pod_part
+    if pod_part["messages_dropped_injected"] <= 0:
+        raise RuntimeError(
+            f"pod partition window [{part_lo}, {part_hi}) dropped no cross-pod "
+            "traffic — the partition fault is not reaching the pod tier"
+        )
+    pre = f"chaos.partition_pod2_w{w}"
+    gap = abs(pod_part["best_cert"] - pod_clean["best_cert"])
+    out["partition_best_cert_gap"] = gap
+    lines.append(f"{pre}.completed,1,window_{part_lo}_{part_hi}_no_deadlock")
+    lines.append(f"{pre}.messages_dropped_injected,{pod_part['messages_dropped_injected']},cross_pod_only")
+    lines.append(f"{pre}.best_cert_gap_vs_clean,{gap:.5f},measured_divergence")
+    lines.append(f"{pre}.wall_ms_per_round,{pod_part['wall_ms_per_round']:.1f},2x4_pod_mesh")
+
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "chaos.json"), "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    return lines
+
+
 def _main() -> None:
     if len(sys.argv) >= 2 and sys.argv[1] == "--sharded-child":
         w, n_dev, rounds = (int(a) for a in sys.argv[2:5])
@@ -826,11 +954,13 @@ def _main() -> None:
         mem_gb = int(sys.argv[10]) if len(sys.argv) > 10 else 0
         worker_kind = sys.argv[11] if len(sys.argv) > 11 else "sparrow"
         control_plane = sys.argv[12] if len(sys.argv) > 12 else "dense"
+        fault_spec = sys.argv[13] if len(sys.argv) > 13 else ""
+        churn = int(sys.argv[14]) if len(sys.argv) > 14 else 0
         print(
             json.dumps(
                 _sharded_child(
                     w, n_dev, rounds, mode, pods, cross_k, capacity, delay_profile, mem_gb,
-                    worker_kind, control_plane,
+                    worker_kind, control_plane, fault_spec, churn,
                 )
             ),
             flush=True,

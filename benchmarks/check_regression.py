@@ -80,6 +80,16 @@ GUARDED = [
     # with them, then guarded like the scaling suite
     ("tmsn_sgd.engine_rounds_to_target", 0.20),
     ("tmsn_sgd.engine_bytes_broadcast", 0.20),
+    # chaos resilience section (bench_scaling.run_chaos, --tiny tier):
+    # the injected/rejected counters are deterministic on the seeded
+    # fault plan (drift means the counter-hash or fault accounting
+    # changed) and the cert-gap-vs-clean figures are 0.0 at the pinned
+    # rates (any nonzero gap after baselining is a resilience
+    # regression). WARN until the baseline is regenerated with them
+    ("chaos.*_w*.wall_ms_per_round", 0.20),
+    ("chaos.*.messages_dropped_injected", 0.20),
+    ("chaos.*.messages_corrupt_rejected", 0.20),
+    ("chaos.*.best_cert_gap_vs_clean", 0.20),
 ]
 
 #: wall-clock metrics absorb cross-machine noise until rebaselined from

@@ -26,8 +26,9 @@ import time
 
 #: the --tiny selection: benches that finish in ~seconds on a 2-core
 #: runner (still real measurements — stopping rule, kernel microbench,
-#: protocol counters) so every push gets a comparable JSON artifact
-TINY_BENCHES = ["stopping", "kernels", "protocol", "tmsn_sgd"]
+#: protocol counters, the chaos resilience section) so every push gets
+#: a comparable JSON artifact
+TINY_BENCHES = ["stopping", "kernels", "protocol", "tmsn_sgd", "chaos"]
 
 
 def _git_sha() -> str | None:
@@ -113,6 +114,7 @@ def main() -> None:
         "protocol": bench_protocol.run,
         "convergence": bench_convergence.run,
         "scaling": bench_scaling.run,
+        "chaos": bench_scaling.run_chaos,
     }
     try:
         from benchmarks import bench_tmsn_sgd

@@ -147,6 +147,252 @@ def _env_str(name: str, default: str) -> str:
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Adversarial message-fault schedule, applied at the gossip
+    boundary (the push side of the in-flight state) inside the jitted
+    round step of both engines.
+
+    Every mask is drawn from a counter-based hash of ``(round, dst gid,
+    src gid, seed, salt)`` — no carried PRNG state, so the same plan
+    produces bit-identical faults on every substrate and sharding
+    (single-device, sharded, pod mesh), which is what lets
+    ``tests/test_chaos.py`` pin cross-substrate equivalence *under*
+    faults. Probabilities are per directed edge per round.
+
+    Exact-vs-measured status per field (see docs/architecture.md for
+    the arguments): ``drop_prob``/``duplicate_prob`` are EXACT no-ops on
+    the final certificates under uniform delay (given adequate queue
+    capacity); ``corrupt_prob`` is EXACT (every corrupt certificate is
+    rejected by the eps-gate soundness check); ``reorder_max`` and the
+    partition window are MEASURED approximations (bench_scaling.py
+    chaos section)."""
+
+    #: per-edge probability a pushed message is silently lost
+    drop_prob: float = 0.0
+    #: per-edge probability a pushed message is enqueued twice
+    #: (idempotent no-op on the dense (W, W, D) buffer — same cell
+    #: written twice — so only the queue paths see extra entries)
+    duplicate_prob: float = 0.0
+    #: bounded reorder: delivery round jittered by +U{0..reorder_max},
+    #: clamped to push_round + ring depth so the payload snapshot is
+    #: still live at delivery. Queue-only (the dense buffer derives the
+    #: ring slot from the static delay matrix, so late delivery would
+    #: fetch a wrong-generation payload) — the engine rejects
+    #: ``reorder_max > 0`` with ``inflight_capacity == 0``.
+    reorder_max: int = 0
+    #: per-edge probability the pushed certificate is corrupted
+    #: (rotating NaN / -inf / +1e6 by hash) — always caught by the
+    #: soundness check, accounted in ``messages_corrupt_rejected``
+    corrupt_prob: float = 0.0
+    seed: int = 0
+    #: DCN pod partition: drop EVERY cross-pod edge for rounds in
+    #: ``[partition_start, partition_stop)``. Inert off the pod mesh
+    #: (no pod geometry => no cross-pod edges). -1/-1 = disabled.
+    partition_start: int = -1
+    partition_stop: int = -1
+
+    @property
+    def active(self) -> bool:
+        return (
+            self.drop_prob > 0.0
+            or self.duplicate_prob > 0.0
+            or self.reorder_max > 0
+            or self.corrupt_prob > 0.0
+            or (0 <= self.partition_start < self.partition_stop)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipPlan:
+    """Elastic-membership schedule: mid-run joins into pre-allocated
+    spare slots, plus leaves (folded into the fail-stop mask).
+
+    ``joins`` holds ``(round, slot)`` pairs with 1-BASED rounds: a join
+    at round ``k`` makes the spare's first live round the k-th round of
+    the run, so ``k=1`` is provably bit-identical to a run where that
+    worker was simply never masked out (the exact pin in
+    tests/test_chaos.py). Slots must lie in the spare region
+    ``[n_workers - spare_slots, n_workers)`` — spares are allocated (and
+    compiled) up front, so activation never recompiles. On activation
+    the spare's laggard credit is reseeded to zero (its credit
+    accumulator ran while masked) and its batch-stream PRNG key is its
+    untouched ``init_batch`` stream (masked rows are bitwise unchanged
+    by the worker contract); it adopts the current best certificate
+    through the ordinary gossip/accept machinery on its first arrival.
+
+    ``leaves`` holds ``(round, worker)`` pairs, folded into
+    ``fail_round`` via min — join + leave composes into churn traces."""
+
+    joins: tuple = ()
+    leaves: tuple = ()
+
+
+def _parse_fault_spec(spec: str) -> FaultPlan | None:
+    """Parse the ``REPRO_FAULT_PLAN`` spec string, e.g.
+    ``"drop=5,dup=2,corrupt=2,reorder=1,seed=9,part=8:16"`` —
+    probabilities in integer PERCENT, ``part`` a ``start:stop`` round
+    window. Empty/whitespace = no plan. Malformed values raise naming
+    the variable (same contract as ``_env_int``)."""
+    spec = spec.strip()
+    if not spec:
+        return None
+    kw: dict[str, Any] = {}
+    for field in spec.split(","):
+        field = field.strip()
+        if not field:
+            continue
+        key, sep, val = field.partition("=")
+        key, val = key.strip().lower(), val.strip()
+        if not sep:
+            raise ValueError(
+                f"env override REPRO_FAULT_PLAN: expected key=value, got {field!r}"
+            )
+        try:
+            if key in ("drop", "dup", "corrupt"):
+                pct = int(val)
+                if not 0 <= pct <= 100:
+                    raise ValueError(
+                        f"env override REPRO_FAULT_PLAN: field {key!r} is a "
+                        f"percentage and must be in [0, 100], got {pct}"
+                    )
+                dest = {"drop": "drop_prob", "dup": "duplicate_prob",
+                        "corrupt": "corrupt_prob"}[key]
+                kw[dest] = pct / 100.0
+            elif key == "reorder":
+                kw["reorder_max"] = int(val)
+            elif key == "seed":
+                kw["seed"] = int(val)
+            elif key == "part":
+                a, _, b = val.partition(":")
+                kw["partition_start"] = int(a)
+                kw["partition_stop"] = int(b)
+            else:
+                raise ValueError(
+                    f"env override REPRO_FAULT_PLAN: unknown field {key!r} "
+                    f"(known: drop, dup, corrupt, reorder, seed, part)"
+                )
+        except ValueError as e:
+            if "REPRO_FAULT_PLAN" in str(e):
+                raise
+            raise ValueError(
+                f"env override REPRO_FAULT_PLAN: field {key!r} must be an "
+                f"integer, got {val!r}"
+            ) from None
+    plan = FaultPlan(**kw)
+    # An all-zero spec is a clean run: normalize to None so the engine
+    # keeps the exact clean-path computation graph.
+    return plan if plan.active else None
+
+
+def _fault_hash(r, dst, src, seed: int, salt: int):
+    """Counter-based per-edge uint32 hash (murmur-style finalizer) over
+    ``(round, dst gid, src gid, plan seed, salt)``. Stateless and
+    elementwise, so the masks it seeds are independent of sharding,
+    substrate, and evaluation order — the property every
+    cross-substrate-under-faults pin rests on."""
+    x = (
+        r.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+        + dst.astype(jnp.uint32) * jnp.uint32(0x85EBCA77)
+        + src.astype(jnp.uint32) * jnp.uint32(0xC2B2AE3D)
+        + jnp.uint32((seed * 0x27D4EB2F + salt * 0x165667B1) & 0xFFFFFFFF)
+    )
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _fault_unit(r, dst, src, seed: int, salt: int):
+    """Uniform [0, 1) f32 per (round, dst, src) edge."""
+    return _fault_hash(r, dst, src, seed, salt).astype(jnp.float32) * jnp.float32(
+        1.0 / 4294967296.0
+    )
+
+
+def _inject_faults(
+    plan: FaultPlan,
+    pod_of,
+    r,
+    dst_gids,
+    src_gids,
+    cert,
+    due,
+    dst_cert,
+    depth: int,
+):
+    """Apply a :class:`FaultPlan` to one round's push candidates.
+
+    ``cert`` is (W_local, m) f32 with +inf marking invalid entries —
+    the common currency of every push path; ``src_gids`` is (W_local, m)
+    i32 global source ids, ``dst_gids`` (W_local,) global destination
+    ids, ``dst_cert`` (W_local,) the destinations' current (post-scan)
+    certificates, ``due`` (W_local, m) i32 absolute delivery rounds or
+    ``None`` on the dense-buffer paths (which cannot reorder).
+
+    Order: drop (incl. pod partition) -> corrupt -> eps-gate soundness
+    check -> due jitter -> duplicate mask. The soundness check rejects
+    any candidate whose certificate is non-finite or >= the
+    destination's current certificate: destination certificates are
+    monotone non-increasing (worker contract), so an incoming cert
+    ``>= cert_now`` can never satisfy the strict accept gate
+    ``incoming < cert_later - eps`` for any eps >= 0 — rejection is
+    provably harmless to the final certificates while keeping every
+    corrupt value out of the pending queues.
+
+    Returns ``(cert, due, dup_mask, n_dropped, n_rejected)`` — the
+    caller turns ``dup_mask`` into extra queue entries (queue paths) or
+    ignores it (dense buffer, where a duplicate write is a no-op)."""
+    valid0 = jnp.isfinite(cert)
+    dst2 = dst_gids[:, None]
+    seed = int(plan.seed)
+    drop = jnp.zeros(cert.shape, bool)
+    if plan.drop_prob > 0.0:
+        drop = _fault_unit(r, dst2, src_gids, seed, 1) < jnp.float32(plan.drop_prob)
+    if pod_of is not None and 0 <= plan.partition_start < plan.partition_stop:
+        in_window = (r >= plan.partition_start) & (r < plan.partition_stop)
+        cross = pod_of[dst_gids][:, None] != pod_of[src_gids]
+        drop = drop | (cross & in_window)
+    drop = drop & valid0
+    n_dropped = jnp.sum(drop, dtype=jnp.int32)
+
+    live = valid0 & ~drop
+    if plan.corrupt_prob > 0.0:
+        cor = live & (
+            _fault_unit(r, dst2, src_gids, seed, 2) < jnp.float32(plan.corrupt_prob)
+        )
+        sel = _fault_hash(r, dst2, src_gids, seed, 3) % jnp.uint32(3)
+        bad = jnp.where(
+            sel == 0,
+            jnp.float32(jnp.nan),
+            jnp.where(sel == 1, -jnp.inf, cert + jnp.float32(1e6)),
+        )
+        cert = jnp.where(cor, bad, cert)
+    # eps-gate soundness check: reject non-finite / non-improving certs
+    # before they can poison the pending state
+    unsound = live & (~jnp.isfinite(cert) | (cert >= dst_cert[:, None]))
+    n_rejected = jnp.sum(unsound, dtype=jnp.int32)
+
+    keep = live & ~unsound
+    cert = jnp.where(keep, cert, jnp.inf)
+    if due is not None:
+        if plan.reorder_max > 0:
+            jit = (
+                _fault_hash(r, dst2, src_gids, seed, 4)
+                % jnp.uint32(plan.reorder_max + 1)
+            ).astype(jnp.int32)
+            due = jnp.minimum(due + jit, r + depth)
+        due = jnp.where(keep, due, -1)
+    dup = jnp.zeros(cert.shape, bool)
+    if plan.duplicate_prob > 0.0:
+        dup = keep & (
+            _fault_unit(r, dst2, src_gids, seed, 5) < jnp.float32(plan.duplicate_prob)
+        )
+    return cert, due, dup, n_dropped, n_rejected
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     n_workers: int = 4
     eps: float = 0.0  # protocol gap; gates ACCEPTANCE only (as in the sim)
@@ -253,6 +499,31 @@ class EngineConfig:
     control_plane: str = dataclasses.field(
         default_factory=lambda: _env_str("REPRO_CONTROL_PLANE", "dense")
     )
+    #: trailing worker rows pre-allocated as masked-out SPARES for
+    #: elastic membership: they carry state and compile like any other
+    #: row but start dead, so a :class:`MembershipPlan` join can
+    #: activate one mid-run with zero recompilation. A spare without a
+    #: scheduled join never activates. Env: REPRO_SPARE_SLOTS.
+    spare_slots: int = dataclasses.field(
+        default_factory=lambda: _env_int("REPRO_SPARE_SLOTS", 0)
+    )
+    #: optional :class:`MembershipPlan` (joins into spare slots, leaves
+    #: folded into ``fail_round``); programmatic only — schedules are
+    #: structured data, not an env knob.
+    membership: Any = None
+    #: adversarial fault schedule at the gossip boundary: a
+    #: :class:`FaultPlan` (programmatic, wins) or the
+    #: ``REPRO_FAULT_PLAN`` spec string parsed by
+    #: :func:`_parse_fault_spec` (e.g. ``"drop=5,corrupt=2,seed=9"``,
+    #: integer percent). Empty = no injection, bit-identical clean
+    #: semantics. The CI chaos leg drives this via the env; tests that
+    #: pin engine-vs-oracle equivalence set ``fault_spec=""`` explicitly
+    #: so the leg only steers env-following runs (same convention as
+    #: the other matrix knobs). Env: REPRO_FAULT_PLAN.
+    fault_spec: str = dataclasses.field(
+        default_factory=lambda: _env_str("REPRO_FAULT_PLAN", "")
+    )
+    fault_plan: Any = None
     #: optional ``jax.sharding.Mesh``: a 1-D ``("workers",)`` mesh
     #: shards the worker axis over one interconnect tier; a 2-D
     #: ``("pod", "workers")`` mesh adds the hierarchical cross-pod tier
@@ -300,7 +571,10 @@ def _queue_push(
     delay_rows: jnp.ndarray,
     r: jnp.ndarray,
     depth: int,
-) -> tuple[PendingQueue, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    dst_cert: jnp.ndarray | None = None,
+    fault: FaultPlan | None = None,
+    pod_of=None,
+) -> tuple[PendingQueue, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Push this round's broadcast candidates into every local
     destination's pending queue, evicting worst-certificate-first.
 
@@ -330,6 +604,15 @@ def _queue_push(
     stays exact); ``occ_pre_max`` is the peak pre-eviction occupancy.
     ``n_evicted == 0`` over a whole run certifies the sparse run as
     bit-identical to the dense oracle.
+
+    With ``fault`` set, :func:`_inject_faults` runs on the candidate
+    block before the merge (the pre-filter is applied PRE-fault, so its
+    top-``C+1`` window is the clean run's); duplicates become extra
+    candidate columns, and the occupancy/eviction accounting switches
+    from the logical offer count to the post-fault effective one (a
+    dropped message must not read as an eviction). Two extra counters
+    ``(n_dropped, n_rejected)`` join the return tuple — zero when
+    ``fault`` is None.
     """
     w = score.shape[0]
     wl, cap = queue.cert.shape
@@ -348,6 +631,23 @@ def _queue_push(
     )
     cand_slot = jnp.where(val, jnp.int32(r % depth), 0)
 
+    n_dropped = jnp.zeros((), jnp.int32)
+    n_rejected = jnp.zeros((), jnp.int32)
+    if fault is not None:
+        cand_cert, cand_due, dup, n_dropped, n_rejected = _inject_faults(
+            fault, pod_of, r, local_gids, cand_src, cand_cert, cand_due,
+            dst_cert, depth,
+        )
+        if fault.duplicate_prob > 0.0:
+            cand_cert = jnp.concatenate(
+                [cand_cert, jnp.where(dup, cand_cert, jnp.inf)], axis=1
+            )
+            cand_src = jnp.concatenate([cand_src, cand_src], axis=1)
+            cand_due = jnp.concatenate(
+                [cand_due, jnp.where(dup, cand_due, -1)], axis=1
+            )
+            cand_slot = jnp.concatenate([cand_slot, cand_slot], axis=1)
+
     m_cert = jnp.concatenate([queue.cert, cand_cert], axis=1)
     m_src = jnp.concatenate([queue.src, cand_src], axis=1)
     m_due = jnp.concatenate([queue.due, cand_due], axis=1)
@@ -363,13 +663,21 @@ def _queue_push(
     n_bcast = jnp.sum(jnp.isfinite(score), dtype=jnp.int32)
     self_b = jnp.isfinite(score[local_gids]).astype(jnp.int32)
     n_cand = jnp.where(alive, n_bcast - self_b, 0)  # (wl,) logical offers
-    occ_pre = jnp.sum(jnp.isfinite(queue.cert), axis=1, dtype=jnp.int32) + n_cand
+    if fault is not None:
+        # occupancy math must use what actually reached the merge, or a
+        # fault-dropped message would be double-counted as an eviction
+        n_off = jnp.sum(jnp.isfinite(cand_cert), axis=1, dtype=jnp.int32)
+    else:
+        n_off = n_cand
+    occ_pre = jnp.sum(jnp.isfinite(queue.cert), axis=1, dtype=jnp.int32) + n_off
     occ_after = jnp.sum(jnp.isfinite(new.cert), axis=1, dtype=jnp.int32)
     return (
         new,
         jnp.sum(n_cand, dtype=jnp.int32),
         jnp.sum(occ_pre - occ_after, dtype=jnp.int32),
         jnp.max(occ_pre),
+        n_dropped,
+        n_rejected,
     )
 
 
@@ -402,7 +710,10 @@ def _queue_push_candidates(
     r: jnp.ndarray,
     depth: int,
     impl: str,
-) -> tuple[PendingQueue, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    dst_cert: jnp.ndarray | None = None,
+    fault: FaultPlan | None = None,
+    pod_of=None,
+) -> tuple[PendingQueue, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Sparse-control ingest: merge an explicit candidate list into the
     pending queues, evicting worst-certificate-first.
 
@@ -416,9 +727,10 @@ def _queue_push_candidates(
     order as :func:`_queue_push`'s lexsort, so the survivor set is
     identical to a dense-score push restricted to these candidates.
 
-    Returns ``(queue, n_pushed, n_evicted, occ_pre_max)`` with the same
-    counter semantics as :func:`_queue_push` (no pre-filter here, so
-    every offered candidate is accounted directly).
+    Returns ``(queue, n_pushed, n_evicted, occ_pre_max, n_dropped,
+    n_rejected)`` with the same counter semantics as :func:`_queue_push`
+    (no pre-filter here, so every offered candidate is accounted
+    directly; the trailing fault counters are zero without a plan).
     """
     w = delay_rows.shape[1]
     wl, m = delay_rows.shape[0], cand_ids.shape[0]
@@ -428,6 +740,17 @@ def _queue_push_candidates(
     c_src = jnp.broadcast_to(ids_c[None, :], (wl, m))
     c_due = jnp.where(val, r + jnp.take_along_axis(delay_rows, c_src, axis=1), -1)
     c_slot = jnp.where(val, jnp.int32(r % depth), 0)
+    n_dropped = jnp.zeros((), jnp.int32)
+    n_rejected = jnp.zeros((), jnp.int32)
+    if fault is not None:
+        c_cert, c_due, dup, n_dropped, n_rejected = _inject_faults(
+            fault, pod_of, r, local_gids, c_src, c_cert, c_due, dst_cert, depth
+        )
+        if fault.duplicate_prob > 0.0:
+            c_cert = jnp.concatenate([c_cert, jnp.where(dup, c_cert, jnp.inf)], axis=1)
+            c_src = jnp.concatenate([c_src, c_src], axis=1)
+            c_due = jnp.concatenate([c_due, jnp.where(dup, c_due, -1)], axis=1)
+            c_slot = jnp.concatenate([c_slot, c_slot], axis=1)
     if impl == "ref":
         from repro.kernels.ref import queue_ingest_ref as ingest
     else:
@@ -437,13 +760,19 @@ def _queue_push_candidates(
     )
     new = PendingQueue(cert=q_cert, src=q_src, due=q_due, slot=q_slot)
     n_cand = jnp.sum(val, axis=1, dtype=jnp.int32)  # (wl,) offers
-    occ_pre = jnp.sum(jnp.isfinite(queue.cert), axis=1, dtype=jnp.int32) + n_cand
+    if fault is not None:
+        n_off = jnp.sum(jnp.isfinite(c_cert), axis=1, dtype=jnp.int32)
+    else:
+        n_off = n_cand
+    occ_pre = jnp.sum(jnp.isfinite(queue.cert), axis=1, dtype=jnp.int32) + n_off
     occ_after = jnp.sum(jnp.isfinite(new.cert), axis=1, dtype=jnp.int32)
     return (
         new,
         jnp.sum(n_cand, dtype=jnp.int32),
         jnp.sum(occ_pre - occ_after, dtype=jnp.int32),
         jnp.max(occ_pre),
+        n_dropped,
+        n_rejected,
     )
 
 
@@ -454,24 +783,38 @@ def _dense_push_candidates(
     alive: jnp.ndarray,
     local_gids: jnp.ndarray,
     delay_rows: jnp.ndarray,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
+    r: jnp.ndarray | None = None,
+    dst_cert: jnp.ndarray | None = None,
+    fault: FaultPlan | None = None,
+    pod_of=None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Sparse-control push into the dense ``(W_local, W, D)`` in-flight
     buffer (``inflight_capacity == 0``): scatter each candidate's
     certificate at ``[dst, src, delay-1]`` by global id — O(W_local·m)
     scatter work instead of the O(W_local·W·D) dense push mask. Invalid
-    candidates scatter to the OOB source index W and drop. Returns
-    ``(inflight, n_pushed)``."""
+    candidates scatter to the OOB source index W and drop. With a
+    ``fault`` plan, dropped/rejected candidates also go OOB (duplication
+    is a no-op on the dense buffer — the same cell written twice — and
+    reorder is rejected at construction). Returns ``(inflight, n_pushed,
+    n_dropped, n_rejected)``."""
     w = delay_rows.shape[1]
     wl, m = delay_rows.shape[0], cand_ids.shape[0]
     ids_c = jnp.clip(cand_ids, 0, w - 1).astype(jnp.int32)
     val = _candidate_valid(cand_cert, cand_ids, alive, local_gids, w)
+    cert2 = jnp.where(val, cand_cert[None, :], jnp.inf)  # (wl, m) per-edge
+    n_dropped = jnp.zeros((), jnp.int32)
+    n_rejected = jnp.zeros((), jnp.int32)
+    if fault is not None:
+        src2 = jnp.broadcast_to(ids_c[None, :], (wl, m))
+        cert2, _, _, n_dropped, n_rejected = _inject_faults(
+            fault, pod_of, r, local_gids, src2, cert2, None, dst_cert, depth=0
+        )
+        val = val & jnp.isfinite(cert2)
     ids2 = jnp.where(val, cand_ids[None, :], w)  # OOB -> dropped
     d = jnp.take_along_axis(delay_rows, jnp.broadcast_to(ids_c[None, :], (wl, m)), axis=1)
     row_idx = jnp.broadcast_to(jnp.arange(wl, dtype=jnp.int32)[:, None], (wl, m))
-    inflight = inflight.at[row_idx, ids2, d - 1].set(
-        jnp.broadcast_to(cand_cert[None, :], (wl, m)), mode="drop"
-    )
-    return inflight, jnp.sum(val, dtype=jnp.int32)
+    inflight = inflight.at[row_idx, ids2, d - 1].set(cert2, mode="drop")
+    return inflight, jnp.sum(val, dtype=jnp.int32), n_dropped, n_rejected
 
 
 class EngineState(NamedTuple):
@@ -504,6 +847,13 @@ class EngineState(NamedTuple):
     #: destination (a measured lower bound on the capacity that makes
     #: the run exact); (n_dev,) per-shard partials when sharded
     occ_peak: jnp.ndarray
+    #: () i32 — messages dropped by FaultPlan injection (random drop
+    #: plus partition-window drops); (n_dev,) partials when sharded
+    dropped_inj: jnp.ndarray
+    #: () i32 — candidates rejected by the eps-gate soundness check
+    #: (non-finite or non-improving certs, active only under a
+    #: FaultPlan); (n_dev,) partials when sharded
+    corrupt_rej: jnp.ndarray
 
 
 class RoundInfo(NamedTuple):
@@ -594,11 +944,89 @@ class TMSNEngine:
         fail = (
             np.full(w, np.iinfo(np.int32).max)
             if config.fail_round is None
-            else np.asarray(config.fail_round)
+            else np.asarray(config.fail_round).copy()
         )
         if fail.shape != (w,):
             raise ValueError(f"fail_round must be ({w},), got {fail.shape}")
+
+        # --- elastic membership: spares, joins, leaves ---------------------
+        spares = int(config.spare_slots)
+        if not 0 <= spares < w:
+            raise ValueError(
+                f"spare_slots must be in [0, n_workers), got {spares} (n_workers={w})"
+            )
+        never = np.iinfo(np.int32).max
+        join_round = np.zeros(w, np.int64)
+        if spares:
+            join_round[w - spares :] = never  # spares without a join stay masked
+        plan = config.membership
+        if plan is not None:
+            if not isinstance(plan, MembershipPlan):
+                raise ValueError(
+                    f"membership must be a MembershipPlan, got {type(plan).__name__}"
+                )
+            seen_slots: set[int] = set()
+            for k, slot in plan.joins:
+                k, slot = int(k), int(slot)
+                if k < 1:
+                    raise ValueError(f"membership join rounds are 1-based, got {k}")
+                if not w - spares <= slot < w:
+                    raise ValueError(
+                        f"membership join slot {slot} is not a spare "
+                        f"(spare region is [{w - spares}, {w}), "
+                        f"spare_slots={spares})"
+                    )
+                if slot in seen_slots:
+                    raise ValueError(f"membership joins slot {slot} twice")
+                seen_slots.add(slot)
+                join_round[slot] = k - 1  # 1-based: k=1 == alive from round 0
+            for k, leaver in plan.leaves:
+                k, leaver = int(k), int(leaver)
+                if k < 1:
+                    raise ValueError(f"membership leave rounds must be >= 1, got {k}")
+                if not 0 <= leaver < w:
+                    raise ValueError(
+                        f"membership leave worker {leaver} out of range [0, {w})"
+                    )
+                fail[leaver] = min(int(fail[leaver]), k)
+        self._join_round_np = join_round
+        self._join_round = jnp.asarray(join_round, jnp.int32)
+        #: joins/spares change the alive/credit dataflow; keep the clean
+        #: engine's exact graph when the feature is off
+        self._has_joins = spares > 0 or (plan is not None and bool(plan.joins))
         self._fail_round = jnp.asarray(fail, jnp.int32)
+
+        # --- fault injection -----------------------------------------------
+        fplan = config.fault_plan
+        if fplan is None:
+            fplan = _parse_fault_spec(config.fault_spec)
+        elif not isinstance(fplan, FaultPlan):
+            raise ValueError(
+                f"fault_plan must be a FaultPlan, got {type(fplan).__name__}"
+            )
+        if fplan is not None:
+            for fname in ("drop_prob", "duplicate_prob", "corrupt_prob"):
+                p = getattr(fplan, fname)
+                if not 0.0 <= p <= 1.0:
+                    raise ValueError(f"FaultPlan.{fname} must be in [0, 1], got {p}")
+            if fplan.reorder_max < 0:
+                raise ValueError(
+                    f"FaultPlan.reorder_max must be >= 0, got {fplan.reorder_max}"
+                )
+            if fplan.reorder_max > 0 and self._capacity == 0:
+                raise ValueError(
+                    "FaultPlan.reorder_max > 0 needs the pending-queue in-flight "
+                    "state (inflight_capacity >= 1 or 'auto'): the dense (W, W, D) "
+                    "buffer derives ring slots from the static delay matrix, so a "
+                    "jittered delivery would fetch a wrong-generation payload"
+                )
+            if not fplan.active:
+                fplan = None  # all-zero plan == clean semantics, same graph
+        self._fault: FaultPlan | None = fplan
+        #: (W,) pod index per global worker id on the pod-mesh engine
+        #: (set by the sharded subclass); None = no pod geometry, which
+        #: makes the FaultPlan partition window inert
+        self._pod_of = None
 
         #: compiled chunk dispatchers keyed by scan length (the main
         #: chunk size plus at most one remainder length per run)
@@ -686,10 +1114,14 @@ class TMSNEngine:
             inflight = _empty_queue(w, self._capacity)
         else:
             inflight = jnp.full((w, w, d), jnp.inf, jnp.float32)
+        if self._has_joins:
+            alive0 = jnp.asarray(self._join_round_np <= 0)
+        else:
+            alive0 = jnp.ones((w,), bool)
         return EngineState(
             worker=wstate,
             certs=jnp.asarray(self.worker.certificates(wstate), jnp.float32),
-            alive=jnp.ones((w,), bool),
+            alive=alive0,
             credit=jnp.zeros((w,), jnp.float32),
             clock=jnp.zeros((w,), jnp.float32),
             inflight=inflight,
@@ -703,6 +1135,8 @@ class TMSNEngine:
             sent_dcn=jnp.zeros((), jnp.int32),
             evicted=jnp.zeros((), jnp.int32),
             occ_peak=jnp.zeros((), jnp.int32),
+            dropped_inj=jnp.zeros((), jnp.int32),
+            corrupt_rej=jnp.zeros((), jnp.int32),
         )
 
     def _deliver_sparse(
@@ -767,7 +1201,18 @@ class TMSNEngine:
         w, depth = cfg.n_workers, self._depth
         r = state.round
         dst_idx = jnp.arange(w)
-        alive = state.alive & (r < self._fail_round)
+        if self._has_joins:
+            # joins are sticky (state.alive | ...) and compose with
+            # fail-stop; a joiner's laggard credit is reseeded on its
+            # join round (the accumulator accrued while it was masked).
+            # Its model/PRNG rows were never touched while masked
+            # (worker contract), so its batch stream is the untouched
+            # init_batch stream — no recompilation, no state surgery.
+            alive = (state.alive | (r >= self._join_round)) & (r < self._fail_round)
+            credit_in = jnp.where(r == self._join_round, 0.0, state.credit)
+        else:
+            alive = state.alive & (r < self._fail_round)
+            credit_in = state.credit
 
         # last round's post-scan certificates, carried in the state (no
         # third certificates() call per round)
@@ -788,7 +1233,7 @@ class TMSNEngine:
                 credit,
                 active,
             ) = self._deliver_sparse(
-                state.inflight, certs0, alive, state.credit, self._speed_norm, r
+                state.inflight, certs0, alive, credit_in, self._speed_norm, r
             )
         else:
             arr = state.inflight[:, :, 0]  # (dst, src) certs
@@ -803,7 +1248,7 @@ class TMSNEngine:
                 [state.inflight[:, :, 1:], jnp.full((w, w, 1), jnp.inf, jnp.float32)],
                 axis=2,
             )
-            credit = state.credit + self._speed_norm
+            credit = credit_in + self._speed_norm
             active = alive & (credit >= 1.0 - 1e-6)
             credit = jnp.where(active, credit - 1.0, credit)
         n_taken = jnp.sum(take, dtype=jnp.int32)
@@ -850,6 +1295,8 @@ class TMSNEngine:
         improved = fired & improves(certs_pre, certs, 0.0) & scan_mask
         n_evicted = jnp.zeros((), jnp.int32)
         occ_pre_max = jnp.zeros((), jnp.int32)
+        n_dropped = jnp.zeros((), jnp.int32)
+        n_rejected = jnp.zeros((), jnp.int32)
         if self._control_sparse:
             # sparse control plane: only the top-k improvers are offered
             # (single-device analogue of the (n_dev, k) all_gather). The
@@ -862,7 +1309,14 @@ class TMSNEngine:
             cand_ids = jnp.where(validk, rows.astype(jnp.int32), w)
             cand_certs = jnp.where(validk, certs[rows], jnp.inf)
             if self._capacity:
-                inflight, n_pushed, n_evicted, occ_pre_max = _queue_push_candidates(
+                (
+                    inflight,
+                    n_pushed,
+                    n_evicted,
+                    occ_pre_max,
+                    n_dropped,
+                    n_rejected,
+                ) = _queue_push_candidates(
                     inflight,
                     cand_certs,
                     cand_ids,
@@ -872,18 +1326,32 @@ class TMSNEngine:
                     r,
                     depth,
                     cfg.round_step_impl,
+                    dst_cert=certs,
+                    fault=self._fault,
+                    pod_of=self._pod_of,
                 )
             else:
-                inflight, n_pushed = _dense_push_candidates(
+                inflight, n_pushed, n_dropped, n_rejected = _dense_push_candidates(
                     inflight,
                     cand_certs,
                     cand_ids,
                     alive,
                     dst_idx.astype(jnp.int32),
                     self._delay.T,
+                    r=r,
+                    dst_cert=certs,
+                    fault=self._fault,
+                    pod_of=self._pod_of,
                 )
         elif self._capacity:
-            inflight, n_pushed, n_evicted, occ_pre_max = _queue_push(
+            (
+                inflight,
+                n_pushed,
+                n_evicted,
+                occ_pre_max,
+                n_dropped,
+                n_rejected,
+            ) = _queue_push(
                 inflight,
                 jnp.where(improved, certs, jnp.inf),
                 alive,
@@ -891,8 +1359,11 @@ class TMSNEngine:
                 self._delay.T,  # (dst, src) rows
                 r,
                 depth,
+                dst_cert=certs,
+                fault=self._fault,
+                pod_of=self._pod_of,
             )
-        else:
+        elif self._fault is None:
             d_idx = jnp.arange(depth)[None, None, :]
             # push_mask[dst, src, d] — delay is indexed [src, dst]
             push_mask = (
@@ -903,6 +1374,36 @@ class TMSNEngine:
             )
             inflight = jnp.where(push_mask, certs[None, :, None], inflight)
             n_pushed = jnp.sum(push_mask, dtype=jnp.int32)
+        else:
+            # faulted dense push: same mask, but carried as a per-edge
+            # (dst, src) certificate matrix so _inject_faults can drop /
+            # corrupt / soundness-reject individual edges
+            push2 = (
+                improved[None, :]
+                & alive[:, None]
+                & (dst_idx[:, None] != dst_idx[None, :])
+            )
+            cert_mat = jnp.where(push2, certs[None, :], jnp.inf)
+            src_mat = jnp.broadcast_to(
+                dst_idx[None, :].astype(jnp.int32), (w, w)
+            )
+            cert_mat, _, _, n_dropped, n_rejected = _inject_faults(
+                self._fault,
+                self._pod_of,
+                r,
+                dst_idx.astype(jnp.int32),
+                src_mat,
+                cert_mat,
+                None,
+                certs,
+                depth,
+            )
+            d_idx = jnp.arange(depth)[None, None, :]
+            push_mask = jnp.isfinite(cert_mat)[:, :, None] & (
+                d_idx == (self._delay.T[:, :, None] - 1)
+            )
+            inflight = jnp.where(push_mask, cert_mat[:, :, None], inflight)
+            n_pushed = jnp.sum(push2, dtype=jnp.int32)  # logical sends
 
         # --- 5. snapshot the models into the ring -------------------------
         # gated to broadcasters: ring[slot, src] is only ever read for a
@@ -936,6 +1437,8 @@ class TMSNEngine:
             sent_dcn=state.sent_dcn,
             evicted=state.evicted + n_evicted,
             occ_peak=jnp.maximum(state.occ_peak, occ_pre_max),
+            dropped_inj=state.dropped_inj + n_dropped,
+            corrupt_rej=state.corrupt_rej + n_rejected,
         )
         info = RoundInfo(
             certs=certs, changed=take | improved, clock=clock, alive=alive
@@ -1039,7 +1542,15 @@ class TMSNEngine:
             sent_dcn=np.asarray(state.sent_dcn),
             evicted=np.asarray(state.evicted),
             control_bytes=(ictrl + dctrl) * rounds,
+            dropped_injected=np.asarray(state.dropped_inj),
+            corrupt_rejected=np.asarray(state.corrupt_rej),
         )
+        # a join "happened" when its spare went live strictly after
+        # round 0 and before the run ended (k=1 joins are full members
+        # from the start, so a k=1 run reports 0 — matching the plain
+        # run it is bit-identical to)
+        jr = self._join_round_np
+        workers_joined = int(np.sum((jr > 0) & (jr < rounds)))
         final_models = [
             jax.tree_util.tree_map(lambda a, i=i: a[i], models)
             for i in range(cfg.n_workers)
@@ -1062,6 +1573,7 @@ class TMSNEngine:
             control_bytes_per_round=ictrl + dctrl,
             control_plane=cfg.control_plane,
             inflight_capacity_selected=self._auto_selected,
+            workers_joined=workers_joined,
         )
 
     def _gossip_split(self) -> tuple[int, int]:

@@ -156,6 +156,7 @@ from repro.core.engine import (
     RoundInfo,
     TMSNEngine,
     _dense_push_candidates,
+    _inject_faults,
     _queue_push,
     _queue_push_candidates,
 )
@@ -172,6 +173,7 @@ class _ShardConsts(NamedTuple):
     speed_norm: jnp.ndarray  # (W,) -> (W_local,)
     fail_round: jnp.ndarray  # (W,) -> (W_local,)
     delay_t: jnp.ndarray  # (W, W) [dst, src] -> (W_local, W)
+    join_round: jnp.ndarray  # (W,) -> (W_local,) spare-activation round
 
 
 class ShardedTMSNEngine(TMSNEngine):
@@ -203,6 +205,13 @@ class ShardedTMSNEngine(TMSNEngine):
             )
         self._w_local = config.n_workers // self._n_dev
         super().__init__(worker, config)
+        if self._n_pods > 1:
+            # (W,) pod of each global worker id — closure-captured by
+            # the shard-mapped step (replicated; a few hundred int32s),
+            # used only to realize the FaultPlan partition window
+            self._pod_of = jnp.arange(config.n_workers, dtype=jnp.int32) // (
+                config.n_workers // self._n_pods
+            )
 
     # ------------------------------------------------------------------
     def _build_chunk(self, length: int):
@@ -232,6 +241,8 @@ class ShardedTMSNEngine(TMSNEngine):
             sent_dcn=P(wx),
             evicted=P(wx),
             occ_peak=P(wx),
+            dropped_inj=P(wx),
+            corrupt_rej=P(wx),
         )
         # stacked over the chunk: leading scan axis, worker axis second
         infos_specs = RoundInfo(
@@ -245,6 +256,7 @@ class ShardedTMSNEngine(TMSNEngine):
             speed_norm=P(wx),
             fail_round=P(wx),
             delay_t=P(wx),
+            join_round=P(wx),
         )
 
         def _any_shard(x):
@@ -276,6 +288,7 @@ class ShardedTMSNEngine(TMSNEngine):
             fail_round=self._fail_round,
             # delay is stored [src, dst]; the step indexes [local dst, src]
             delay_t=jnp.transpose(self._delay),
+            join_round=self._join_round,
         )
         return lambda state: step(state, consts)
 
@@ -290,6 +303,8 @@ class ShardedTMSNEngine(TMSNEngine):
             sent_dcn=zi,
             evicted=zi,
             occ_peak=zi,
+            dropped_inj=zi,
+            corrupt_rej=zi,
         )
         if self._n_pods > 1:
             # one private snapshot ring per pod (the intra-pod gather
@@ -382,7 +397,15 @@ class ShardedTMSNEngine(TMSNEngine):
         r = state.round
         row_idx = jnp.arange(wl)
         local_ids = self._dev_index() * wl + row_idx  # global dst ids
-        alive = state.alive & (r < consts.fail_round)
+        if self._has_joins:
+            # sticky joins + fail-stop, with the joiner's laggard credit
+            # reseeded on its activation round (see the single-device
+            # engine for the full membership notes)
+            alive = (state.alive | (r >= consts.join_round)) & (r < consts.fail_round)
+            credit_in = jnp.where(r == consts.join_round, 0.0, state.credit)
+        else:
+            alive = state.alive & (r < consts.fail_round)
+            credit_in = state.credit
 
         # last round's post-scan certificates, carried in the state (no
         # third certificates() call per round)
@@ -405,7 +428,7 @@ class ShardedTMSNEngine(TMSNEngine):
                 credit,
                 active,
             ) = self._deliver_sparse(
-                state.inflight, certs0, alive, state.credit, consts.speed_norm, r
+                state.inflight, certs0, alive, credit_in, consts.speed_norm, r
             )
         else:
             arr = state.inflight[:, :, 0]  # (wl dst, W src) certs
@@ -439,7 +462,7 @@ class ShardedTMSNEngine(TMSNEngine):
                 [state.inflight[:, :, 1:], jnp.full((wl, w, 1), jnp.inf, jnp.float32)],
                 axis=2,
             )
-            credit = state.credit + consts.speed_norm
+            credit = credit_in + consts.speed_norm
             active = alive & (credit >= 1.0 - 1e-6)
             credit = jnp.where(active, credit - 1.0, credit)
 
@@ -483,6 +506,8 @@ class ShardedTMSNEngine(TMSNEngine):
         pod_idx = jax.lax.axis_index("pod") if self._n_pods > 1 else None
         n_evicted = jnp.zeros((), jnp.int32)
         occ_pre_max = jnp.zeros((), jnp.int32)
+        n_dropped = jnp.zeros((), jnp.int32)
+        n_rejected = jnp.zeros((), jnp.int32)
         if self._control_sparse:
             kc = min(int(cfg.gossip_top_k), wl)
             cand_rows, cand_valid = self._top_k_candidates(improved, certs, kc)
@@ -534,7 +559,14 @@ class ShardedTMSNEngine(TMSNEngine):
                     gathered["models"],
                 )
             if self._capacity:
-                inflight, n_pushed, n_evicted, occ_pre_max = _queue_push_candidates(
+                (
+                    inflight,
+                    n_pushed,
+                    n_evicted,
+                    occ_pre_max,
+                    n_dropped,
+                    n_rejected,
+                ) = _queue_push_candidates(
                     inflight,
                     gathered["certs"],
                     gathered["ids"],
@@ -544,15 +576,22 @@ class ShardedTMSNEngine(TMSNEngine):
                     r,
                     depth,
                     cfg.round_step_impl,
+                    dst_cert=certs,
+                    fault=self._fault,
+                    pod_of=self._pod_of,
                 )
             else:
-                inflight, n_pushed = _dense_push_candidates(
+                inflight, n_pushed, n_dropped, n_rejected = _dense_push_candidates(
                     inflight,
                     gathered["certs"],
                     gathered["ids"],
                     alive,
                     local_ids,
                     consts.delay_t,
+                    r=r,
+                    dst_cert=certs,
+                    fault=self._fault,
+                    pod_of=self._pod_of,
                 )
         elif cfg.gossip_mode == "gated":
             k = min(int(cfg.gossip_top_k), wl)
@@ -637,7 +676,14 @@ class ShardedTMSNEngine(TMSNEngine):
                 # modes, so one (W,) candidate score serves dense and
                 # gated alike; on a pod mesh bcast_all is zero outside
                 # this pod
-                inflight, n_pushed, n_evicted, occ_pre_max = _queue_push(
+                (
+                    inflight,
+                    n_pushed,
+                    n_evicted,
+                    occ_pre_max,
+                    n_dropped,
+                    n_rejected,
+                ) = _queue_push(
                     inflight,
                     jnp.where(bcast_all, certs_all, jnp.inf),
                     alive,
@@ -645,8 +691,11 @@ class ShardedTMSNEngine(TMSNEngine):
                     consts.delay_t,
                     r,
                     depth,
+                    dst_cert=certs,
+                    fault=self._fault,
+                    pod_of=self._pod_of,
                 )
-            else:
+            elif self._fault is None:
                 d_idx = jnp.arange(depth)[None, None, :]
                 # push_mask[local dst, global src, d]; on a pod mesh
                 # bcast_all is zero outside this pod, so tier-1 pushes
@@ -659,6 +708,36 @@ class ShardedTMSNEngine(TMSNEngine):
                 )
                 inflight = jnp.where(push_mask, certs_all[None, :, None], inflight)
                 n_pushed = jnp.sum(push_mask, dtype=jnp.int32)
+            else:
+                # faulted dense push: per-edge (wl, W) certificate matrix
+                # so _inject_faults can drop/corrupt/reject single edges
+                # (mirrors the single-device engine's faulted branch)
+                push2 = (
+                    bcast_all[None, :]
+                    & alive[:, None]
+                    & (local_ids[:, None] != jnp.arange(w)[None, :])
+                )
+                cert_mat = jnp.where(push2, certs_all[None, :], jnp.inf)
+                src_mat = jnp.broadcast_to(
+                    jnp.arange(w, dtype=jnp.int32)[None, :], (wl, w)
+                )
+                cert_mat, _, _, n_dropped, n_rejected = _inject_faults(
+                    self._fault,
+                    self._pod_of,
+                    r,
+                    local_ids.astype(jnp.int32),
+                    src_mat,
+                    cert_mat,
+                    None,
+                    certs,
+                    depth,
+                )
+                d_idx = jnp.arange(depth)[None, None, :]
+                push_mask = jnp.isfinite(cert_mat)[:, :, None] & (
+                    d_idx == (consts.delay_t[:, :, None] - 1)
+                )
+                inflight = jnp.where(push_mask, cert_mat[:, :, None], inflight)
+                n_pushed = jnp.sum(push2, dtype=jnp.int32)  # logical sends
 
         # --- gossip, tier 2 (cross-pod, DCN): improvements accumulate
         # in the pending mask and the freshest certificates flush over
@@ -705,7 +784,7 @@ class ShardedTMSNEngine(TMSNEngine):
                     ids_x = jnp.where(valid_x, gx["ids"], w)
                     certs_x = jnp.where(valid_x, gx["certs"], jnp.inf)
                     if self._capacity:
-                        inflight, nx, ne, occ = _queue_push_candidates(
+                        inflight, nx, ne, occ, nd, nr = _queue_push_candidates(
                             inflight,
                             certs_x,
                             ids_x,
@@ -715,13 +794,25 @@ class ShardedTMSNEngine(TMSNEngine):
                             r,
                             depth,
                             cfg.round_step_impl,
+                            dst_cert=certs,
+                            fault=self._fault,
+                            pod_of=self._pod_of,
                         )
-                        return (xpend & ~flushed, inflight, ring, nx, ne, occ)
-                    inflight, nx = _dense_push_candidates(
-                        inflight, certs_x, ids_x, alive, local_ids, consts.delay_t
+                        return (xpend & ~flushed, inflight, ring, nx, ne, occ, nd, nr)
+                    inflight, nx, nd, nr = _dense_push_candidates(
+                        inflight,
+                        certs_x,
+                        ids_x,
+                        alive,
+                        local_ids,
+                        consts.delay_t,
+                        r=r,
+                        dst_cert=certs,
+                        fault=self._fault,
+                        pod_of=self._pod_of,
                     )
                     z = jnp.zeros((), jnp.int32)
-                    return (xpend & ~flushed, inflight, ring, nx, z, z)
+                    return (xpend & ~flushed, inflight, ring, nx, z, z, nd, nr)
                 xcerts = (
                     jnp.full((w,), jnp.inf, jnp.float32)
                     .at[gx["ids"]]
@@ -736,7 +827,7 @@ class ShardedTMSNEngine(TMSNEngine):
                     # same queue push as tier 1, with the candidate score
                     # masked to cross-pod sources (same-pod destinations
                     # already heard these via tier 1)
-                    inflight, nx, ne, occ = _queue_push(
+                    inflight, nx, ne, occ, nd, nr = _queue_push(
                         inflight,
                         jnp.where(xbcast & (src_pod != pod_idx), xcerts, jnp.inf),
                         alive,
@@ -744,35 +835,68 @@ class ShardedTMSNEngine(TMSNEngine):
                         consts.delay_t,
                         r,
                         depth,
+                        dst_cert=certs,
+                        fault=self._fault,
+                        pod_of=self._pod_of,
                     )
-                    return (xpend & ~flushed, inflight, ring, nx, ne, occ)
-                d_idx = jnp.arange(depth)[None, None, :]
-                xpush = (
-                    xbcast[None, :, None]
-                    & alive[:, None, None]
-                    # only cross-pod destinations (self-exclusion implied)
-                    & (src_pod != pod_idx)[None, :, None]
-                    & (d_idx == (consts.delay_t[:, :, None] - 1))
-                )
-                inflight = jnp.where(xpush, xcerts[None, :, None], inflight)
+                    return (xpend & ~flushed, inflight, ring, nx, ne, occ, nd, nr)
                 z = jnp.zeros((), jnp.int32)
+                nd = nr = z
+                xpush2 = (
+                    xbcast[None, :]
+                    & alive[:, None]
+                    # only cross-pod destinations (self-exclusion implied)
+                    & (src_pod != pod_idx)[None, :]
+                )
+                xcert_mat = jnp.where(xpush2, xcerts[None, :], jnp.inf)
+                if self._fault is not None:
+                    src_mat = jnp.broadcast_to(
+                        jnp.arange(w, dtype=jnp.int32)[None, :], (wl, w)
+                    )
+                    xcert_mat, _, _, nd, nr = _inject_faults(
+                        self._fault,
+                        self._pod_of,
+                        r,
+                        local_ids.astype(jnp.int32),
+                        src_mat,
+                        xcert_mat,
+                        None,
+                        certs,
+                        depth,
+                    )
+                d_idx = jnp.arange(depth)[None, None, :]
+                xpush = jnp.isfinite(xcert_mat)[:, :, None] & (
+                    d_idx == (consts.delay_t[:, :, None] - 1)
+                )
+                inflight = jnp.where(xpush, xcert_mat[:, :, None], inflight)
                 return (
                     xpend & ~flushed,
                     inflight,
                     ring,
-                    jnp.sum(xpush, dtype=jnp.int32),
+                    jnp.sum(xpush2, dtype=jnp.int32),
                     z,
                     z,
+                    nd,
+                    nr,
                 )
 
             if int(cfg.cross_pod_every_k) == 1:
-                xpend, inflight, ring, n_pushed_x, ne_x, occ_x = _flush(
+                xpend, inflight, ring, n_pushed_x, ne_x, occ_x, nd_x, nr_x = _flush(
                     (xpend, inflight, ring)
                 )
             else:
                 # `r` is replicated, so every device takes the same
                 # branch and the pod-axis collective stays uniform
-                xpend, inflight, ring, n_pushed_x, ne_x, occ_x = jax.lax.cond(
+                (
+                    xpend,
+                    inflight,
+                    ring,
+                    n_pushed_x,
+                    ne_x,
+                    occ_x,
+                    nd_x,
+                    nr_x,
+                ) = jax.lax.cond(
                     (r % int(cfg.cross_pod_every_k)) == 0,
                     _flush,
                     lambda args: (
@@ -782,11 +906,15 @@ class ShardedTMSNEngine(TMSNEngine):
                         jnp.zeros((), jnp.int32),
                         jnp.zeros((), jnp.int32),
                         jnp.zeros((), jnp.int32),
+                        jnp.zeros((), jnp.int32),
+                        jnp.zeros((), jnp.int32),
                     ),
                     (xpend, inflight, ring),
                 )
             n_evicted = n_evicted + ne_x
             occ_pre_max = jnp.maximum(occ_pre_max, occ_x)
+            n_dropped = n_dropped + nd_x
+            n_rejected = n_rejected + nr_x
 
         new_state = EngineState(
             worker=wstate,
@@ -806,6 +934,8 @@ class ShardedTMSNEngine(TMSNEngine):
             sent_dcn=state.sent_dcn + n_pushed_x,
             evicted=state.evicted + n_evicted,
             occ_peak=jnp.maximum(state.occ_peak, occ_pre_max),
+            dropped_inj=state.dropped_inj + n_dropped,
+            corrupt_rej=state.corrupt_rej + n_rejected,
         )
         info = RoundInfo(
             certs=certs, changed=take | improved, clock=clock, alive=alive

@@ -59,6 +59,13 @@ class TrafficCounters:
     #: the per-round ``control_bytes_per_round`` figure × rounds. 0 on
     #: the event sim and the single-device engine (no wire).
     control_bytes: int = 0
+    #: messages removed in flight by FaultPlan injection — random
+    #: per-edge drops plus partition-window drops (0 without a plan)
+    dropped_injected: int = 0
+    #: push candidates rejected by the eps-gate soundness check
+    #: (non-finite or non-improving certificates; active only under a
+    #: FaultPlan, so 0 on every clean run)
+    corrupt_rejected: int = 0
 
     @property
     def sent_ici(self) -> int:
@@ -78,6 +85,8 @@ class TrafficCounters:
         sent_dcn: Any = 0,
         evicted: Any = 0,
         control_bytes: int = 0,
+        dropped_injected: Any = 0,
+        corrupt_rejected: Any = 0,
     ) -> "TrafficCounters":
         """Reduce per-shard partial counters into global totals.
 
@@ -99,6 +108,8 @@ class TrafficCounters:
             evicted=int(np.sum(evicted)),
             payload_bytes=payload_bytes,
             control_bytes=int(control_bytes),
+            dropped_injected=int(np.sum(dropped_injected)),
+            corrupt_rejected=int(np.sum(corrupt_rejected)),
         )
 
 
@@ -164,6 +175,17 @@ class SimResult:
     #: the capacity the ``inflight_capacity="auto"`` warm-up probe
     #: selected for this run (0 when capacity was explicit)
     inflight_capacity_selected: int = 0
+    #: messages removed in flight by FaultPlan injection (random drops
+    #: + partition-window drops; 0 on clean runs and the event sim)
+    messages_dropped_injected: int = 0
+    #: push candidates rejected by the eps-gate soundness check —
+    #: non-finite or non-improving certificates, which a corrupt
+    #: message must present to be dangerous (0 on clean runs)
+    messages_corrupt_rejected: int = 0
+    #: MembershipPlan joins that activated a spare strictly after round
+    #: 0 and before the run ended (a join at round 1 is a from-the-start
+    #: member and does not count — it is bit-identical to a plain run)
+    workers_joined: int = 0
 
     def best_certificate_trace(self) -> list[tuple[float, float]]:
         """Monotone (time, best-cert-so-far) envelope across workers."""
@@ -188,5 +210,7 @@ class SimResult:
             bytes_broadcast=traffic.bytes_broadcast,
             messages_sent_dcn=traffic.sent_dcn,
             messages_evicted=traffic.evicted,
+            messages_dropped_injected=traffic.dropped_injected,
+            messages_corrupt_rejected=traffic.corrupt_rejected,
             **kw,
         )

@@ -1,0 +1,461 @@
+"""Elastic membership + adversarial fault injection, classified exact-vs-measured.
+
+The chaos layer (``FaultPlan`` / ``MembershipPlan`` / ``spare_slots``)
+gets the same treatment as every other knob in this repo: each scenario
+is either EXACT — pinned bit-for-bit here — or an explicit measured
+approximation (bench_scaling.py's chaos section). The exact claims:
+
+  * **join @ k=1 == masked-from-start**: activating a spare at round 1
+    is bit-identical to a plain run where that worker was a member all
+    along (``workers_joined == 0`` — it never "joined" mid-run);
+  * **cross-substrate determinism under faults**: fault masks come from
+    a counter-based per-edge hash of ``(round, dst gid, src gid, seed,
+    salt)`` — stateless and elementwise, so a faulted run is
+    bit-identical on the single-device engine, sharded dense/gated
+    gossip, the sparse in-flight queue, the sparse control plane
+    (``gossip_top_k=W`` so candidate sets match dense control), and the
+    pod mesh;
+  * **duplication == clean** under uniform delay and adequate capacity:
+    a duplicate is an identical (cert, src, due, slot) queue entry —
+    argmin ties on it, round delivery clears both copies. The dense
+    buffer absorbs duplicates by construction (one slot per edge);
+  * **corruption never poisons**: every corrupted certificate is
+    rejected by the eps-gate soundness check (non-finite, or >= the
+    destination's current certificate — which monotonicity makes
+    forever unacceptable), counted in ``messages_corrupt_rejected``,
+    and the best (minimum) final certificate matches the clean run —
+    corruption mangles in-flight copies, never local state. Per-worker
+    certificates MAY diverge from clean (a corrupted legitimate
+    improvement is lost with the message): that part is measured.
+
+Drop/reorder/partition and mid-run churn change delivery and are
+measured, but remain exactly reproducible (same plan -> same run) and
+deadlock-free — pinned here as completion + counter accounting.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    EngineConfig,
+    FaultPlan,
+    MembershipPlan,
+    _parse_fault_spec,
+    make_engine,
+)
+from repro.core.engine_sharded import sharded_engine_available
+from test_sharded_engine import ShardableToyWorker, _mesh_for, _pod_mesh_or_skip
+
+W = 8
+PERIOD = [1, 2, 3, 1, 2, 3, 1, 2]
+DEC = [0.5, 0.9, 1.3, 0.7, 1.1, 0.6, 0.8, 1.0]
+ROUNDS = 24
+
+needs_devices = pytest.mark.skipif(
+    not sharded_engine_available(),
+    reason="sharded chaos substrates need >= 2 devices (XLA_FLAGS forces 8 in CI)",
+)
+
+#: the five CI substrates every exact claim is pinned on. Each entry is
+#: (tag, needs_mesh, config overrides); "pod" resolves its mesh lazily
+#: (it skips on odd device counts).
+SUBSTRATES = [
+    ("single-dense", False, dict(inflight_capacity=0)),
+    ("sharded-dense", True, dict(inflight_capacity=0)),
+    ("sharded-gated", True, dict(inflight_capacity=0, gossip_mode="gated")),
+    ("sparse-inflight", True, dict(inflight_capacity=16)),
+    (
+        "sparse-control",
+        True,
+        dict(
+            inflight_capacity=16,
+            gossip_mode="gated",
+            control_plane="sparse",
+            gossip_top_k=W,
+        ),
+    ),
+    ("pod-mesh", "pod", dict(inflight_capacity=0)),
+]
+
+SUBSTRATE_IDS = [s[0] for s in SUBSTRATES]
+
+
+def _toy():
+    return ShardableToyWorker(PERIOD, DEC)
+
+
+def _mesh_or_skip(needs_mesh):
+    if needs_mesh == "pod":
+        return _pod_mesh_or_skip(pods=2)
+    if needs_mesh:
+        if not sharded_engine_available():
+            pytest.skip("needs >= 2 devices")
+        return _mesh_for(W)
+    return None
+
+
+def _run(needs_mesh=False, **kw):
+    # pin every env-read knob: these are cross-config identity tests, so
+    # no CI matrix leg may flip one side of a comparison (the substrate
+    # overrides in SUBSTRATES re-raise exactly what each leg varies)
+    kw.setdefault("gossip_mode", "dense")
+    kw.setdefault("control_plane", "dense")
+    kw.setdefault("rounds_per_dispatch", 8)
+    kw.setdefault("cross_pod_every_k", 1)
+    kw.setdefault("cross_pod_top_k", 1)
+    kw.setdefault("spare_slots", 0)
+    cfg = EngineConfig(
+        n_workers=W,
+        max_rounds=kw.pop("max_rounds", ROUNDS),
+        delay_rounds=kw.pop("delay_rounds", 1),
+        seed=0,
+        fault_spec=kw.pop("fault_spec", ""),
+        mesh=_mesh_or_skip(needs_mesh),
+        **kw,
+    )
+    return make_engine(_toy(), cfg).run()
+
+
+def _same_run(a, b, tag=""):
+    """Bit-identical protocol outcome: certificates AND event history."""
+    assert a.final_certificates == b.final_certificates, tag
+    assert a.history == b.history, tag
+    assert a.rounds == b.rounds, tag
+
+
+def _monotone_history(res):
+    """Per-worker certificates never increase along the history."""
+    last: dict = {}
+    for _, wid, cert in res.history:
+        assert np.isfinite(cert), f"non-finite cert for worker {wid}"
+        assert cert <= last.get(wid, np.inf), f"cert rose for worker {wid}"
+        last[wid] = cert
+
+
+DROP = FaultPlan(drop_prob=0.3, seed=7)
+CORRUPT = FaultPlan(corrupt_prob=0.5, seed=3)
+DUP = FaultPlan(duplicate_prob=0.5, seed=5)
+
+
+class TestMembershipExact:
+    """Join-equivalence: the provable membership claims."""
+
+    @pytest.mark.parametrize("tag,needs_mesh,kw", SUBSTRATES, ids=SUBSTRATE_IDS)
+    def test_join_at_round_one_is_masked_from_start(self, tag, needs_mesh, kw):
+        """Activating a spare at k=1 == plain run with it live from round
+        0 — bit-for-bit, and it does not count as a mid-run join."""
+        plain = _run(needs_mesh, **kw)
+        joined = _run(
+            needs_mesh,
+            spare_slots=1,
+            membership=MembershipPlan(joins=((1, W - 1),)),
+            **kw,
+        )
+        _same_run(joined, plain, tag)
+        assert joined.workers_joined == 0
+
+    def test_mid_run_join_counts_and_participates(self):
+        res = _run(
+            spare_slots=2,
+            membership=MembershipPlan(joins=((6, 6), (10, 7))),
+        )
+        assert res.workers_joined == 2
+        assert all(np.isfinite(res.final_certificates))
+        # The joiners caught up: adopted/improved past their init cert.
+        joiner_events = [e for e in res.history if e[1] in (6, 7)]
+        assert joiner_events, "joined spares never improved or adopted"
+        _monotone_history(res)
+
+    def test_spare_is_inert_until_join(self):
+        """An unactivated spare == a worker fail-stopped at round 0:
+        it never sends, adopts, or appears in history — bit-for-bit."""
+        fail = np.full(W, ROUNDS + 1, dtype=np.int64)
+        fail[W - 2 :] = 0
+        masked = _run(fail_round=fail)
+        spared = _run(spare_slots=2)
+        _same_run(spared, masked, "idle spares vs fail-stop@0")
+        # spares contribute only the t=0 initial-certificate record
+        assert all(e[1] < W - 2 for e in spared.history if e[0] > 0)
+        assert spared.workers_joined == 0
+
+    def test_join_and_leave_compose_into_churn(self):
+        res = _run(
+            spare_slots=2,
+            membership=MembershipPlan(joins=((6, 6), (12, 7)), leaves=((8, 0), (14, 6))),
+        )
+        assert res.workers_joined == 2
+        assert res.rounds == ROUNDS
+        _monotone_history(res)
+
+    @needs_devices
+    def test_churn_identical_on_sharded_queue_path(self):
+        membership = MembershipPlan(joins=((6, 6), (10, 7)), leaves=((12, 1),))
+        single = _run(spare_slots=2, membership=membership, inflight_capacity=16)
+        sharded = _run(
+            True, spare_slots=2, membership=membership, inflight_capacity=16
+        )
+        _same_run(sharded, single, "churn sharded vs single")
+        assert sharded.workers_joined == single.workers_joined == 2
+
+
+class TestMembershipValidation:
+    def _cfg(self, **kw):
+        return EngineConfig(
+            n_workers=W, max_rounds=4, seed=0, fault_spec="", **kw
+        )
+
+    def test_spare_slots_bounds(self):
+        with pytest.raises(ValueError, match="spare_slots"):
+            make_engine(_toy(), self._cfg(spare_slots=-1))
+        with pytest.raises(ValueError, match="spare_slots"):
+            make_engine(_toy(), self._cfg(spare_slots=W))
+
+    def test_join_round_must_be_positive(self):
+        with pytest.raises(ValueError, match="join"):
+            make_engine(
+                _toy(),
+                self._cfg(
+                    spare_slots=1, membership=MembershipPlan(joins=((0, W - 1),))
+                ),
+            )
+
+    def test_join_slot_must_be_a_spare(self):
+        with pytest.raises(ValueError, match="spare"):
+            make_engine(
+                _toy(),
+                self._cfg(spare_slots=1, membership=MembershipPlan(joins=((2, 0),))),
+            )
+
+    def test_duplicate_join_slot_rejected(self):
+        with pytest.raises(ValueError, match="slot"):
+            make_engine(
+                _toy(),
+                self._cfg(
+                    spare_slots=2,
+                    membership=MembershipPlan(joins=((2, W - 1), (3, W - 1))),
+                ),
+            )
+
+
+class TestDropExact:
+    """Drop is measured vs clean, but the masks are substrate-
+    independent: the faulted run itself is bit-identical everywhere."""
+
+    @pytest.mark.parametrize(
+        "tag,needs_mesh,kw", SUBSTRATES[1:], ids=SUBSTRATE_IDS[1:]
+    )
+    def test_drop_bit_identical_across_substrates(self, tag, needs_mesh, kw):
+        oracle = _run(fault_plan=DROP, **SUBSTRATES[0][2])
+        assert oracle.messages_dropped_injected > 0
+        res = _run(needs_mesh, fault_plan=DROP, **kw)
+        _same_run(res, oracle, tag)
+        assert res.messages_dropped_injected == oracle.messages_dropped_injected
+
+    def test_drop_counted_and_monotone(self):
+        res = _run(fault_plan=DROP)
+        assert res.messages_dropped_injected > 0
+        _monotone_history(res)
+
+    def test_partition_window_is_inert_without_pods(self):
+        """The partition fault drops CROSS-POD edges; a single-tier run
+        has none, so a partition-only plan is bit-identical to clean."""
+        clean = _run()
+        part = _run(fault_plan=FaultPlan(partition_start=4, partition_stop=12, seed=1))
+        _same_run(part, clean, "single-tier partition")
+        assert part.messages_dropped_injected == 0
+
+    def test_partition_drops_cross_pod_traffic(self):
+        res = _run("pod", fault_plan=FaultPlan(partition_start=4, partition_stop=12, seed=1))
+        assert res.messages_dropped_injected > 0
+        assert res.rounds == ROUNDS
+        _monotone_history(res)
+
+
+class TestDuplicationExact:
+    """Under uniform delay + adequate capacity, duplication == clean:
+    identical copies tie in the delivery argmin and clear together."""
+
+    @pytest.mark.parametrize(
+        "tag,needs_mesh,kw",
+        [s for s in SUBSTRATES if s[2].get("inflight_capacity")],
+        ids=[s[0] for s in SUBSTRATES if s[2].get("inflight_capacity")],
+    )
+    def test_duplication_identical_to_clean_on_queues(self, tag, needs_mesh, kw):
+        clean = _run(needs_mesh, **kw)
+        dup = _run(needs_mesh, fault_plan=DUP, **kw)
+        _same_run(dup, clean, tag)
+        assert dup.messages_evicted == 0
+
+    def test_duplication_single_device_queue(self):
+        clean = _run(inflight_capacity=16)
+        dup = _run(inflight_capacity=16, fault_plan=DUP)
+        _same_run(dup, clean, "single-device dup")
+        assert dup.messages_evicted == 0
+
+    def test_dense_buffer_absorbs_duplicates(self):
+        """One slot per (dst, src, ring) edge: a duplicate overwrites an
+        identical copy of itself — the dense path is inherently immune."""
+        clean = _run(inflight_capacity=0)
+        dup = _run(inflight_capacity=0, fault_plan=DUP)
+        _same_run(dup, clean, "dense dup")
+
+
+class TestCorruptionSoundness:
+    """The eps-gate soundness check: corrupted certificates (NaN, -inf,
+    or inflated) are rejected at push time and can never poison a queue
+    or alter the best certificate. Loss of the corrupted message's
+    legitimate content is measured, not exact."""
+
+    @pytest.mark.parametrize("tag,needs_mesh,kw", SUBSTRATES, ids=SUBSTRATE_IDS)
+    def test_corrupt_rejected_on_every_substrate(self, tag, needs_mesh, kw):
+        oracle = _run(fault_plan=CORRUPT, **SUBSTRATES[0][2])
+        res = _run(needs_mesh, fault_plan=CORRUPT, **kw)
+        assert res.messages_corrupt_rejected > 0
+        # Same hash -> same rejections -> bit-identical faulted run.
+        _same_run(res, oracle, tag)
+        assert res.messages_corrupt_rejected == oracle.messages_corrupt_rejected
+
+    def test_corruption_never_poisons_state(self):
+        res = _run(fault_plan=CORRUPT)
+        assert all(np.isfinite(res.final_certificates))
+        _monotone_history(res)
+
+    def test_corruption_preserves_best_certificate(self):
+        """Corruption touches in-flight copies, never local state: the
+        best worker's locally-earned minimum survives any corruption."""
+        clean = _run()
+        cor = _run(fault_plan=CORRUPT)
+        assert min(cor.final_certificates) == min(clean.final_certificates)
+
+    def test_low_rate_corruption_identical_to_clean(self):
+        """When no corrupted message would have been adopted, rejection
+        is provably invisible — pinned at a seed where that holds."""
+        clean = _run(inflight_capacity=16)
+        cor = _run(
+            inflight_capacity=16, fault_plan=FaultPlan(corrupt_prob=0.02, seed=14)
+        )
+        assert cor.messages_corrupt_rejected > 0
+        _same_run(cor, clean, "low-rate corruption")
+
+
+class TestReorderMeasured:
+    def test_reorder_completes_and_stays_monotone(self):
+        res = _run(inflight_capacity=16, fault_plan=FaultPlan(reorder_max=2, seed=11))
+        assert res.rounds == ROUNDS
+        assert all(np.isfinite(res.final_certificates))
+        _monotone_history(res)
+
+    def test_reorder_requires_queue_inflight(self):
+        """The dense buffer derives ring slots from the static delay
+        matrix; due-round jitter needs the explicit queue representation."""
+        with pytest.raises(ValueError, match="reorder"):
+            make_engine(
+                _toy(),
+                EngineConfig(
+                    n_workers=W,
+                    max_rounds=4,
+                    inflight_capacity=0,
+                    fault_plan=FaultPlan(reorder_max=1, seed=1),
+                    fault_spec="",
+                ),
+            )
+
+    def test_reorder_deterministic(self):
+        plan = FaultPlan(reorder_max=2, seed=11)
+        a = _run(inflight_capacity=16, fault_plan=plan)
+        b = _run(inflight_capacity=16, fault_plan=plan)
+        _same_run(a, b, "reorder replay")
+
+
+class TestComposedChaos:
+    """Everything at once: drops + duplicates + corruption + churn must
+    still complete, stay monotone, and account every counter."""
+
+    def test_full_chaos_completes(self):
+        res = _run(
+            inflight_capacity=16,
+            spare_slots=2,
+            membership=MembershipPlan(joins=((6, 6), (10, 7)), leaves=((12, 0),)),
+            fault_plan=FaultPlan(
+                drop_prob=0.1, duplicate_prob=0.1, corrupt_prob=0.1, seed=13
+            ),
+        )
+        assert res.rounds == ROUNDS
+        assert res.messages_dropped_injected > 0
+        assert res.messages_corrupt_rejected > 0
+        assert res.workers_joined == 2
+        _monotone_history(res)
+
+    @needs_devices
+    def test_full_chaos_identical_single_vs_sharded(self):
+        kw = dict(
+            inflight_capacity=16,
+            spare_slots=2,
+            membership=MembershipPlan(joins=((6, 6),), leaves=((12, 0),)),
+            fault_plan=FaultPlan(drop_prob=0.1, corrupt_prob=0.1, seed=13),
+        )
+        single = _run(**kw)
+        sharded = _run(True, **kw)
+        _same_run(sharded, single, "composed chaos")
+        assert sharded.messages_dropped_injected == single.messages_dropped_injected
+        assert sharded.messages_corrupt_rejected == single.messages_corrupt_rejected
+
+
+class TestAutoCapacityUnderChurn:
+    """``inflight_capacity="auto"`` warm-up probe vs membership events
+    inside the warm-up window (satellite: the probe must pick a sane
+    capacity when workers fail-stop or join during warm-up)."""
+
+    def _membership(self):
+        # Warm-up is min(max(2*depth+2, 8), max_rounds) = 8 rounds at
+        # delay 1: both events land INSIDE the probe window.
+        return dict(
+            spare_slots=1,
+            membership=MembershipPlan(joins=((4, W - 1),), leaves=((6, 0),)),
+        )
+
+    def test_auto_capacity_with_churn_in_warmup(self):
+        auto = _run(inflight_capacity="auto", **self._membership())
+        assert auto.inflight_capacity_selected >= 1
+        explicit = _run(
+            inflight_capacity=auto.inflight_capacity_selected, **self._membership()
+        )
+        _same_run(auto, explicit, "auto vs explicit under churn")
+        assert auto.messages_evicted == 0
+
+    def test_auto_capacity_with_failstop_in_warmup(self):
+        fail = np.full(W, ROUNDS + 1, dtype=np.int64)
+        fail[:2] = 3  # inside the 8-round warm-up window
+        auto = _run(inflight_capacity="auto", fail_round=fail.copy())
+        assert auto.inflight_capacity_selected >= 1
+        explicit = _run(
+            inflight_capacity=auto.inflight_capacity_selected, fail_round=fail.copy()
+        )
+        _same_run(auto, explicit, "auto vs explicit under fail-stop")
+        assert auto.messages_evicted == 0
+
+
+class TestFaultSpecEnv:
+    """REPRO_FAULT_PLAN spec string round-trips (constructor-arg form;
+    the env hardening lives in test_engine_config.py)."""
+
+    def test_spec_parses_all_fields(self):
+        p = _parse_fault_spec("drop=5,dup=2,corrupt=2,reorder=1,seed=9,part=8:16")
+        assert (p.drop_prob, p.duplicate_prob, p.corrupt_prob) == (0.05, 0.02, 0.02)
+        assert (p.reorder_max, p.seed) == (1, 9)
+        assert (p.partition_start, p.partition_stop) == (8, 16)
+
+    def test_inactive_specs_normalize_to_none(self):
+        assert _parse_fault_spec("") is None
+        assert _parse_fault_spec("drop=0") is None
+        assert _parse_fault_spec("seed=9") is None
+
+    def test_spec_equivalent_to_plan(self):
+        via_spec = _run(fault_spec="drop=30,seed=7")
+        via_plan = _run(fault_plan=FaultPlan(drop_prob=0.3, seed=7))
+        _same_run(via_spec, via_plan, "spec vs plan")
+
+    def test_plan_beats_spec(self):
+        res = _run(fault_spec="drop=90,seed=1", fault_plan=FaultPlan(drop_prob=0.3, seed=7))
+        ref = _run(fault_plan=FaultPlan(drop_prob=0.3, seed=7))
+        _same_run(res, ref, "plan precedence")

@@ -145,6 +145,32 @@ class TestConfigReference:
             "ci.yml lost the sparse-control matrix leg"
         )
 
+    def test_fault_plan_documented_and_wired_into_ci(self):
+        """The fault-injection knobs must be documented, and the chaos
+        matrix leg must actually inject a plan — a dropped env wire or
+        a neutered (all-zero) leg spec fails here."""
+        doc = self._doc()
+        for knob in ("fault_spec", "fault_plan", "spare_slots", "membership"):
+            row = next(
+                (ln for ln in doc.splitlines() if ln.strip().startswith(f"| `{knob}`")),
+                None,
+            )
+            assert row is not None, f"docs/config.md lost the `{knob}` knob row"
+        wf = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+        assert "REPRO_FAULT_PLAN" in wf, (
+            "ci.yml no longer sets REPRO_FAULT_PLAN — the chaos matrix leg "
+            "is not injecting faults into the engines"
+        )
+        m = re.search(r'fault_plan: "([^"]*drop=\d+[^"]*)"', wf)
+        assert m is not None, (
+            "ci.yml's chaos leg no longer carries an active fault plan "
+            "(expected a fault_plan spec with a nonzero drop rate)"
+        )
+        assert "seed=" in m.group(1), (
+            "the chaos leg's fault plan must pin a seed — an unseeded plan "
+            "would make the leg nondeterministic across runs"
+        )
+
 
 # ---------------------------------------------------------------------------
 # README quickstart

@@ -145,7 +145,10 @@ class TestEngineSimulatorEquivalence:
         eng = TMSNEngine(
             ToyBatchedWorker(period, dec),
             EngineConfig(
-                n_workers=w, delay_rounds=1, target_certificate=target, max_rounds=500
+                n_workers=w, delay_rounds=1, target_certificate=target, max_rounds=500,
+                # exact-accounting comparison against the fault-free event
+                # simulator — the CI chaos leg must not inject here
+                fault_spec="",
             ),
         )
         res_eng = eng.run()
@@ -167,7 +170,7 @@ class TestEngineSimulatorEquivalence:
         w = 8
         eng = TMSNEngine(
             ToyBatchedWorker([1] * w, [0.01 * (i + 1) for i in range(w)]),
-            EngineConfig(n_workers=w, delay_rounds=1, max_rounds=50),
+            EngineConfig(n_workers=w, delay_rounds=1, max_rounds=50, fault_spec=""),
         )
         res = eng.run()
         certs = np.asarray(res.final_certificates)
@@ -181,7 +184,7 @@ class TestEngineSimulatorEquivalence:
         w = 4
         mk = lambda d: TMSNEngine(
             ToyBatchedWorker([1, 10**9, 10**9, 10**9], [0.1] * w),
-            EngineConfig(n_workers=w, delay_rounds=d, max_rounds=20),
+            EngineConfig(n_workers=w, delay_rounds=d, max_rounds=20, fault_spec=""),
         ).run()
         near = mk(1)
         far = mk(8)
@@ -195,7 +198,8 @@ class TestEngineSimulatorEquivalence:
         w = 3
         eng = TMSNEngine(
             ToyBatchedWorker([1] * w, [0.1] * w),
-            EngineConfig(n_workers=w, speed=[1.0, 1.0, 0.25], max_rounds=40),
+            EngineConfig(n_workers=w, speed=[1.0, 1.0, 0.25], max_rounds=40,
+                         fault_spec=""),
         )
         res = eng.run()
         certs = np.asarray(res.final_certificates)
@@ -207,7 +211,8 @@ class TestEngineSimulatorEquivalence:
         w = 4
         eng = TMSNEngine(
             ToyBatchedWorker([1, 10**9, 10**9, 10**9], [0.1] * w),
-            EngineConfig(n_workers=w, fail_round=[5, 10**6, 10**6, 10**6], max_rounds=30),
+            EngineConfig(n_workers=w, fail_round=[5, 10**6, 10**6, 10**6], max_rounds=30,
+                         fault_spec=""),
         )
         res = eng.run()
         # sender died after 5 rounds (4 completed segments + 1 dead round);
@@ -220,7 +225,7 @@ class TestEngineSimulatorEquivalence:
         w = 3
         eng = TMSNEngine(
             ToyBatchedWorker([1, 10**9, 10**9], [0.01] * w),
-            EngineConfig(n_workers=w, eps=0.5, max_rounds=20),
+            EngineConfig(n_workers=w, eps=0.5, max_rounds=20, fault_spec=""),
         )
         res = eng.run()
         assert res.messages_sent > 0  # broadcasts still go out

@@ -22,12 +22,14 @@ INT_KNOBS = [
     ("REPRO_CROSS_POD_EVERY_K", "cross_pod_every_k", 1),
     ("REPRO_CROSS_POD_TOP_K", "cross_pod_top_k", 1),
     ("REPRO_INFLIGHT_CAPACITY", "inflight_capacity", 0),
+    ("REPRO_SPARE_SLOTS", "spare_slots", 0),
 ]
 
 ALL_VARS = [v for v, _, _ in INT_KNOBS] + [
     "REPRO_GOSSIP_MODE",
     "REPRO_ROUND_STEP_IMPL",
     "REPRO_CONTROL_PLANE",
+    "REPRO_FAULT_PLAN",
 ]
 
 
@@ -176,6 +178,67 @@ class TestAutoCapacityKnob:
             )
 
 
+class TestFaultPlanOverride:
+    """REPRO_FAULT_PLAN is a STRING knob holding a structured spec
+    ("drop=5,corrupt=3,seed=9,part=8:16" — integer percents). Like the
+    mode knobs, the env layer is permissive and the spec is parsed —
+    with errors naming the variable — at engine construction."""
+
+    def test_unset_defaults_empty(self):
+        assert EngineConfig().fault_spec == ""
+
+    def test_env_value_becomes_default(self, monkeypatch):
+        monkeypatch.setenv("REPRO_FAULT_PLAN", "drop=5,seed=9")
+        assert EngineConfig().fault_spec == "drop=5,seed=9"
+
+    def test_empty_falls_back(self, monkeypatch):
+        monkeypatch.setenv("REPRO_FAULT_PLAN", "  ")
+        assert EngineConfig().fault_spec == ""
+
+    def test_explicit_arg_beats_env(self, monkeypatch):
+        monkeypatch.setenv("REPRO_FAULT_PLAN", "drop=50")
+        assert EngineConfig(fault_spec="").fault_spec == ""
+
+    @pytest.mark.parametrize(
+        "raw", ["drop=x", "drop", "bogus=1", "drop=101", "dup=-1", "part=5"]
+    )
+    def test_malformed_spec_raises_naming_the_var(self, raw, monkeypatch):
+        monkeypatch.setenv("REPRO_FAULT_PLAN", raw)
+        cfg = EngineConfig(n_workers=2)
+        assert cfg.fault_spec == raw  # parsing is permissive ...
+        with pytest.raises(ValueError, match="REPRO_FAULT_PLAN"):
+            make_engine(_StubWorker(), cfg)  # ... construction is not
+
+    def test_explicit_plan_beats_spec(self, monkeypatch):
+        """A programmatic FaultPlan wins over the env spec string — the
+        same explicit-beats-env rule every other knob follows."""
+        from repro.core.engine import FaultPlan
+
+        monkeypatch.setenv("REPRO_FAULT_PLAN", "drop=x")  # would not parse
+        eng = make_engine(
+            _StubWorker(),
+            EngineConfig(n_workers=2, fault_plan=FaultPlan(drop_prob=0.1, seed=1)),
+        )
+        assert eng._fault is not None and eng._fault.drop_prob == 0.1
+
+    def test_all_zero_spec_is_a_clean_run(self):
+        eng = make_engine(
+            _StubWorker(), EngineConfig(n_workers=2, fault_spec="drop=0,seed=7")
+        )
+        assert eng._fault is None
+
+
+class TestSpareSlotsKnob:
+    def test_env_out_of_range_rejected_at_engine_construction(self, monkeypatch):
+        monkeypatch.setenv("REPRO_SPARE_SLOTS", "2")
+        with pytest.raises(ValueError, match="spare_slots"):
+            make_engine(_StubWorker(), EngineConfig(n_workers=2))
+
+    def test_negative_rejected(self):
+        with pytest.raises(ValueError, match="spare_slots"):
+            make_engine(_StubWorker(), EngineConfig(n_workers=2, spare_slots=-1))
+
+
 class TestKnobValidation:
     """Range checks fire at engine construction for env and explicit
     values alike."""
@@ -209,6 +272,9 @@ def test_every_env_knob_is_a_config_field():
         assert field in fields
     assert "gossip_mode" in fields
     assert "control_plane" in fields
+    assert "fault_spec" in fields
+    assert "fault_plan" in fields
+    assert "membership" in fields
 
 
 class _StubWorker:

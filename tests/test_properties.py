@@ -146,7 +146,7 @@ def test_eviction_never_evicts_delivery_argmin_uniform_delay(scores):
     to the dense oracle at uniform delay."""
     w = len(scores)
     score = jnp.asarray(scores, jnp.float32)
-    q, _, _, _ = _queue_push(
+    q, _, _, _, _, _ = _queue_push(
         _empty_queue(w, 1),
         score,
         jnp.ones((w,), bool),
@@ -187,10 +187,95 @@ def test_sparse_control_certs_match_dense_uniform_delay(periods, eps, k):
                 gossip_top_k=k,
                 control_plane=plane,
                 seed=0,
+                fault_spec="",  # oracle comparison: chaos CI leg must not steer it
             ),
         ).run()
     assert runs["sparse"].final_certificates == runs["dense"].final_certificates
     assert runs["sparse"].history == runs["dense"].history
+
+
+@settings(deadline=None, max_examples=5)
+@given(
+    st.lists(st.integers(min_value=1, max_value=5), min_size=8, max_size=8),
+    st.floats(min_value=0.0, max_value=0.4, width=32),
+    st.floats(min_value=0.0, max_value=0.4, width=32),
+    st.floats(min_value=0.0, max_value=0.4, width=32),
+    st.integers(min_value=0, max_value=2),
+    st.integers(min_value=0, max_value=10_000),
+)
+def test_cert_monotone_under_any_fault_schedule(periods, drop, dup, corrupt, reorder, seed):
+    """Certificate monotonicity is an ACCEPT-gated invariant: faults can
+    only remove, duplicate, delay, or corrupt in-flight copies, and the
+    eps-gate + soundness check stand between the queue and local state —
+    so per-worker certificates never increase and never go non-finite
+    under ANY drop/duplicate/reorder/corruption schedule."""
+    from repro.core.engine import FaultPlan
+
+    w = len(periods)
+    worker = ShardableToyWorker(periods, [0.01 * (i % 7 + 1) for i in range(w)])
+    res = make_engine(
+        worker,
+        EngineConfig(
+            n_workers=w,
+            max_rounds=16,
+            inflight_capacity=16,
+            fault_plan=FaultPlan(
+                drop_prob=drop,
+                duplicate_prob=dup,
+                corrupt_prob=corrupt,
+                reorder_max=reorder,
+                seed=seed,
+            ),
+            seed=0,
+            fault_spec="",
+        ),
+    ).run()
+    assert res.rounds == 16
+    last = {}
+    for _, wid, cert in res.history:
+        assert np.isfinite(cert)
+        assert cert <= last.get(wid, np.inf)
+        last[wid] = cert
+    assert all(np.isfinite(res.final_certificates))
+
+
+@settings(deadline=None, max_examples=5)
+@given(
+    st.lists(st.integers(min_value=1, max_value=5), min_size=8, max_size=8),
+    st.floats(min_value=0.05, max_value=0.6, width=32),
+    st.integers(min_value=0, max_value=10_000),
+)
+def test_soundness_gate_never_suppresses_legitimate_improvement(periods, dup, seed):
+    """An active FaultPlan runs EVERY in-flight certificate through the
+    eps-gate soundness check, not just corrupted ones — so a
+    duplication-only schedule is the adversarial probe that the gate
+    only ever rejects messages that could never be accepted: for any
+    random schedule the run must stay bit-identical to the clean run.
+    (Monotone destination certificates make a non-improving arrival
+    forever unacceptable; rejecting it at push time is invisible.)"""
+    from repro.core.engine import FaultPlan
+
+    w = len(periods)
+    worker = ShardableToyWorker(periods, [0.01 * (i % 7 + 1) for i in range(w)])
+
+    def run(plan):
+        return make_engine(
+            worker,
+            EngineConfig(
+                n_workers=w,
+                max_rounds=16,
+                inflight_capacity=16,
+                fault_plan=plan,
+                seed=0,
+                fault_spec="",
+            ),
+        ).run()
+
+    clean = run(None)
+    faulted = run(FaultPlan(duplicate_prob=dup, seed=seed))
+    assert faulted.final_certificates == clean.final_certificates
+    assert faulted.history == clean.history
+    assert faulted.messages_evicted == 0
 
 
 @settings(deadline=None, max_examples=20)

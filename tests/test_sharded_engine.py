@@ -100,6 +100,7 @@ class ShardableToyWorker:
 def _run_pair(period, dec, **cfg):
     """(single-device result, sharded result) on identical configs."""
     w = len(period)
+    cfg.setdefault("fault_spec", "")  # identity pair: no CI chaos-leg injection
     res1 = TMSNEngine(ShardableToyWorker(period, dec), EngineConfig(n_workers=w, **cfg)).run()
     eng = make_engine(
         ShardableToyWorker(period, dec),
@@ -185,6 +186,7 @@ class TestToyEquivalence:
 def _run_modes(period, dec, **cfg):
     """(dense result, gated result) through the sharded engine."""
     w = len(period)
+    cfg.setdefault("fault_spec", "")  # cross-mode identity: no chaos-leg injection
     out = []
     for mode in ("dense", "gated"):
         eng = make_engine(
@@ -352,6 +354,7 @@ def _run_pod_pair(period, dec, pods=2, **cfg):
     Identity tests must pin cross_pod_every_k/top_k explicitly (the CI
     pod matrix leg overrides the env defaults to an approximating k)."""
     w = len(period)
+    cfg.setdefault("fault_spec", "")  # identity pair: no CI chaos-leg injection
     pod_mesh = _pod_mesh_or_skip(pods)
     flat = make_engine(
         ShardableToyWorker(period, dec),

@@ -58,6 +58,10 @@ def _run(cap, impl="ref", mesh=None, w=W, worker=None, **cfg):
             max_rounds=cfg.pop("max_rounds", 30),
             inflight_capacity=cap,
             round_step_impl=impl,
+            # identity tests compare runs across in-flight representations,
+            # where offer-side counters are only comparable on clean traffic
+            # — the CI chaos leg must not inject here
+            fault_spec=cfg.pop("fault_spec", ""),
             mesh=mesh,
             **cfg,
         ),
@@ -153,7 +157,7 @@ class TestOverflow:
         # src 2 broadcasts cert -3: worse than dst0's resident -5
         # (candidate dropped), better than dst1's resident -1 (evicted)
         score = jnp.full((4,), jnp.inf).at[2].set(-3.0)
-        q, n_pushed, n_evicted, occ = _queue_push(
+        q, n_pushed, n_evicted, occ, _, _ = _queue_push(
             occupied, score, jnp.ones((2,), bool), jnp.asarray([0, 1]), delay,
             jnp.int32(4), 8,
         )
@@ -173,7 +177,7 @@ class TestOverflow:
             due=jnp.asarray([[9]], jnp.int32),
         )
         score = jnp.full((4,), jnp.inf).at[1].set(-2.0)
-        q, _, n_evicted, _ = _queue_push(
+        q, _, n_evicted, _, _, _ = _queue_push(
             q0, score, jnp.ones((1,), bool), jnp.asarray([0]),
             jnp.ones((1, 4), jnp.int32), jnp.int32(0), 8,
         )
@@ -183,7 +187,7 @@ class TestOverflow:
         q0 = _empty_queue(2, 2)
         score = jnp.asarray([-1.0, -2.0], jnp.float32)  # both broadcast
         alive = jnp.asarray([True, False])
-        q, n_pushed, n_evicted, occ = _queue_push(
+        q, n_pushed, n_evicted, occ, _, _ = _queue_push(
             q0, score, alive, jnp.asarray([0, 1]),
             jnp.ones((2, 2), jnp.int32), jnp.int32(0), 8,
         )
@@ -432,7 +436,7 @@ class TestAutoCapacity:
 
     def test_auto_via_env_var(self, monkeypatch):
         monkeypatch.setenv("REPRO_INFLIGHT_CAPACITY", "auto")
-        cfg = EngineConfig(n_workers=W, max_rounds=30)
+        cfg = EngineConfig(n_workers=W, max_rounds=30, fault_spec="")
         assert cfg.inflight_capacity == "auto"
         res = make_engine(_toy(), cfg).run()
         assert res.inflight_capacity_selected > 0

@@ -31,7 +31,7 @@ import pytest
 from repro.boosting import BatchedSparrowWorker, SparrowConfig
 from repro.boosting.scanner import ScannerConfig
 from repro.boosting.stumps import empty_model, model_payload_bytes
-from repro.core.engine import EngineConfig, TMSNEngine, make_engine
+from repro.core.engine import EngineConfig, MembershipPlan, TMSNEngine, make_engine
 from repro.core.engine_sharded import sharded_engine_available
 from repro.core.sgd_worker import lm_sgd_worker
 from repro.core.tmsn_sgd import TMSNSGDConfig, oracle_run
@@ -184,6 +184,59 @@ class TestWorkerContract:
             certs = after
 
 
+class TestAdoptAfterJoin:
+    """Elastic-membership contract case: a spare row that never scanned
+    (masked since init) adopting the cluster's best snapshot on its join
+    round must be identity-at-zero-cost for every OTHER row — the same
+    guarantee the engine's take-gated adopt leans on, now exercised from
+    a completely cold state for BOTH production workers."""
+
+    def test_adopt_into_fresh_spare_row_is_identity_elsewhere(self, worker):
+        state = worker.init_batch(W, seed=0)
+        # the members make real progress while the spare (last row) is
+        # masked out — its state stays exactly as init_batch left it
+        member_mask = jnp.asarray([True] * (W - 1) + [False])
+        for _ in range(3):
+            state, _, _ = worker.scan_round(state, member_mask)
+        certs = worker.certificates(state)
+        best = int(np.argmin(np.asarray(certs)[: W - 1]))
+        donors = jnp.full((W,), best, jnp.int32)
+        in_models = jax.tree_util.tree_map(
+            lambda a: a[donors], worker.export_models(state)
+        )
+        in_certs = certs[donors]
+        take = jnp.asarray([False] * (W - 1) + [True])  # only the joiner
+        new, cost = worker.adopt_batch(state, in_models, in_certs, take)
+        _assert_rows_equal(new, state, np.arange(W - 1))
+        np.testing.assert_array_equal(np.asarray(cost)[: W - 1], 0.0)
+        # the joiner now reports the adopted snapshot's certificate
+        np.testing.assert_array_equal(
+            np.asarray(worker.certificates(new))[W - 1], np.asarray(certs)[best]
+        )
+
+    def test_engine_join_run_both_workers(self, worker):
+        """End-to-end: a spare activated mid-run under the real engine —
+        the run completes, counts the join, and stays monotone."""
+        res = TMSNEngine(
+            worker,
+            _engine_cfg(
+                spare_slots=1,
+                # k=2: early enough that the slow Sparrow joiner still
+                # fires a post-activation improvement within ROUNDS
+                membership=MembershipPlan(joins=((2, W - 1),)),
+            ),
+        ).run()
+        assert res.workers_joined == 1
+        assert res.rounds == ROUNDS
+        per_worker = {}
+        for _, wid, cert in res.history:
+            prev = per_worker.get(wid)
+            assert prev is None or cert <= prev + 1e-7
+            per_worker[wid] = cert
+        # the joiner shows up in post-activation history
+        assert any(wid == W - 1 and t > 0 for t, wid, _ in res.history)
+
+
 # ---------------------------------------------------------------------------
 # optional-hook machinery
 # ---------------------------------------------------------------------------
@@ -304,6 +357,7 @@ def _engine_cfg(**kw):
         max_rounds=ROUNDS,
         delay_rounds=1,
         seed=0,
+        fault_spec="",  # oracle comparisons: chaos CI leg must not steer them
     )
     base.update(kw)
     return EngineConfig(**base)
@@ -359,6 +413,7 @@ class TestShardedSGDWorker:
             max_rounds=ROUNDS,
             delay_rounds=1,
             seed=0,
+            fault_spec="",
             mesh=mesh,
             **kw,
         )
