@@ -90,6 +90,23 @@ GUARDED = [
     ("chaos.*.messages_dropped_injected", 0.20),
     ("chaos.*.messages_corrupt_rejected", 0.20),
     ("chaos.*.best_cert_gap_vs_clean", 0.20),
+    # serving tier (bench_serving.py, --tiny tier): request latency and
+    # per-step wall get the wall-clock headroom via the name check; the
+    # zero-downtime counters baseline at 0, so ANY nonzero reading is a
+    # hard failure once baselined; the stale-cert gaps are
+    # deterministic on the seeded engine run. Higher-is-better
+    # throughput (req_per_s, decode_tok_per_s) is reported but not
+    # guarded — the guard is one-sided lower-is-better. WARN until the
+    # baseline is regenerated with them
+    ("serving.b*.latency_p50_wall_ms", 0.20),
+    ("serving.b*.latency_p99_wall_ms", 0.20),
+    ("serving.b*.step_p50_wall_ms", 0.20),
+    ("serving.adopt.dropped_requests", 0.20),
+    ("serving.adopt.recompiles", 0.20),
+    ("serving.adopt.blip_p99_wall_ms", 0.20),
+    ("serving.adopt.steady_p99_wall_ms", 0.20),
+    ("serving.adopt.stale_cert_gap_mean", 0.20),
+    ("serving.adopt.stale_cert_gap_max", 0.20),
 ]
 
 #: wall-clock metrics absorb cross-machine noise until rebaselined from

@@ -26,9 +26,10 @@ import time
 
 #: the --tiny selection: benches that finish in ~seconds on a 2-core
 #: runner (still real measurements — stopping rule, kernel microbench,
-#: protocol counters, the chaos resilience section) so every push gets
-#: a comparable JSON artifact
-TINY_BENCHES = ["stopping", "kernels", "protocol", "tmsn_sgd", "chaos"]
+#: protocol counters, the chaos resilience section, the serving tier's
+#: continuous-batching + adoption run) so every push gets a comparable
+#: JSON artifact
+TINY_BENCHES = ["stopping", "kernels", "protocol", "tmsn_sgd", "chaos", "serving"]
 
 
 def _git_sha() -> str | None:
@@ -126,6 +127,12 @@ def main() -> None:
         from benchmarks import bench_ablations
 
         benches["ablations"] = bench_ablations.run
+    except ImportError:
+        pass
+    try:
+        from benchmarks import bench_serving
+
+        benches["serving"] = bench_serving.run
     except ImportError:
         pass
 

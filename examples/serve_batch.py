@@ -23,7 +23,8 @@ def main() -> None:
     print(f"serving reduced {cfg.name}: batch={args.batch} "
           f"prompt={args.prompt_len} gen={args.gen}")
     out = serve(cfg, args.batch, args.prompt_len, args.gen)
-    print(f"prefill {out['prefill_s']:.2f}s; decode {out['decode_s']:.2f}s "
+    print(f"compile {out['compile_s']:.2f}s (one-time); "
+          f"prefill {out['prefill_s']:.2f}s; decode {out['decode_s']:.2f}s "
           f"({out['tok_per_s']:.1f} tok/s)")
     print("first request's generations:", out["generated"][0][:12], "...")
 

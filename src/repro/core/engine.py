@@ -146,6 +146,19 @@ def _env_str(name: str, default: str) -> str:
     return raw if raw else default
 
 
+def _env_float(name: str, default: float) -> float:
+    """Float ``REPRO_*`` override: unset/empty/whitespace falls back to
+    the default; a malformed value raises naming the variable (same
+    contract as :func:`_env_int`)."""
+    raw = os.environ.get(name, "").strip()
+    if not raw:
+        return default
+    try:
+        return float(raw)
+    except ValueError:
+        raise ValueError(f"env override {name} must be a float, got {raw!r}") from None
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultPlan:
     """Adversarial message-fault schedule, applied at the gossip
@@ -524,6 +537,26 @@ class EngineConfig:
         default_factory=lambda: _env_str("REPRO_FAULT_PLAN", "")
     )
     fault_plan: Any = None
+    #: serving publish gate, in rounds: with a publisher attached
+    #: (:meth:`TMSNEngine.attach_publisher`), the engine checks the
+    #: ensemble's best certificate at the first chunk boundary at or
+    #: after every k-th round and publishes that worker's model into
+    #: the adoption slot when it improved. 0 (default) disables the
+    #: check entirely — the clean engine takes no extra host syncs.
+    #: Publishing is host-side and outside the jitted round step, so
+    #: the protocol semantics and the compiled graph are unchanged
+    #: either way. Env: REPRO_PUBLISH_EVERY_K.
+    publish_every_k: int = dataclasses.field(
+        default_factory=lambda: _env_int("REPRO_PUBLISH_EVERY_K", 0)
+    )
+    #: minimum best-certificate improvement (strict, in certificate
+    #: units) over the previously published snapshot before a new one
+    #: is published — the serving-edge analogue of the protocol's
+    #: broadcast-on-improvement gate. 0.0 publishes on any strict
+    #: improvement. Env: REPRO_PUBLISH_EPS.
+    publish_eps: float = dataclasses.field(
+        default_factory=lambda: _env_float("REPRO_PUBLISH_EPS", 0.0)
+    )
     #: optional ``jax.sharding.Mesh``: a 1-D ``("workers",)`` mesh
     #: shards the worker axis over one interconnect tier; a 2-D
     #: ``("pod", "workers")`` mesh adds the hierarchical cross-pod tier
@@ -916,6 +949,18 @@ class TMSNEngine:
             raise ValueError(
                 f"control_plane must be 'dense' or 'sparse', got {config.control_plane!r}"
             )
+        if config.publish_every_k < 0:
+            raise ValueError(
+                f"publish_every_k must be >= 0, got {config.publish_every_k}"
+            )
+        if not config.publish_eps >= 0.0:  # also rejects NaN
+            raise ValueError(f"publish_eps must be >= 0, got {config.publish_eps}")
+        #: serving-tier publisher (an AdoptionSlot-shaped object); None
+        #: until attach_publisher() — the clean run() path stays free of
+        #: the per-chunk certificate fetch
+        self._publisher: Any = None
+        self._published_cert = float("inf")
+        self._next_publish_round = 0
         self._control_sparse = config.control_plane == "sparse"
         #: 0 = dense (W, W, D) oracle; C >= 1 = bounded PendingQueue;
         #: None = "auto", resolved by a warm-up probe at run() time
@@ -1476,10 +1521,53 @@ class TMSNEngine:
         self._capacity = max(1, math.ceil(peak * AUTO_CAPACITY_HEADROOM))
         self._auto_selected = self._capacity
 
+    def attach_publisher(self, slot: Any) -> None:
+        """Register a snapshot publisher (anything with a
+        ``publish(params, cert, round)`` method — canonically a
+        :class:`repro.launch.serving.AdoptionSlot`). At the first chunk
+        boundary at/after every ``publish_every_k``-th round, :meth:`run`
+        exports the best-certificate worker's model and publishes it when
+        the certificate improved by more than ``publish_eps`` since the
+        last publish. Host-side only: the jitted round step is untouched,
+        and :class:`~repro.core.engine_sharded.ShardedTMSNEngine` inherits
+        the hook unchanged (chunk outputs are global arrays)."""
+        if self.config.publish_every_k < 1:
+            raise ValueError(
+                "attach_publisher requires publish_every_k >= 1 "
+                f"(got {self.config.publish_every_k}); set it in EngineConfig "
+                "or via REPRO_PUBLISH_EVERY_K"
+            )
+        self._publisher = slot
+
+    def _maybe_publish(self, state: EngineState, rounds: int, final: bool = False) -> None:
+        """Publish the best-certificate model if due and improved."""
+        if self._publisher is None:
+            return
+        if not final and rounds < self._next_publish_round:
+            return
+        k = int(self.config.publish_every_k)
+        while self._next_publish_round <= rounds:
+            self._next_publish_round += k
+        live = np.where(np.asarray(state.alive), np.asarray(state.certs), np.inf)
+        best = int(np.argmin(live))
+        best_cert = float(live[best])
+        if not np.isfinite(best_cert):
+            return
+        if best_cert >= self._published_cert - float(self.config.publish_eps):
+            return
+        models = self.worker.export_models(state.worker)
+        params = jax.tree_util.tree_map(lambda a: np.asarray(a[best]), models)
+        self._publisher.publish(params, cert=best_cert, round=rounds)
+        self._published_cert = best_cert
+
     def run(self) -> SimResult:
         cfg = self.config
         if self._capacity is None:
             self._resolve_auto_capacity()
+        # each run() publishes from scratch: the first due boundary with
+        # a finite best certificate publishes unconditionally
+        self._published_cert = float("inf")
+        self._next_publish_round = max(int(cfg.publish_every_k), 1)
         state = self._init_state()
         certs0 = np.asarray(state.certs)
         history: list[tuple[float, int, float]] = [
@@ -1499,6 +1587,7 @@ class TMSNEngine:
             remaining -= kk
             if not fetch:
                 rounds += kk
+                self._maybe_publish(state, rounds)
                 continue
             certs_k = np.asarray(infos.certs)  # (kk, W)
             stop = None
@@ -1525,8 +1614,12 @@ class TMSNEngine:
                 history.extend(
                     zip(clock_k[rr, ww].tolist(), ww.tolist(), certs_k[rr, ww].tolist())
                 )
+            self._maybe_publish(state, rounds)
             if stop is not None:
                 break
+        # final flush: a last-chunk improvement between cadence points
+        # still reaches the serving tier before run() returns
+        self._maybe_publish(state, rounds, final=True)
 
         certs = np.asarray(state.certs)
         models = self.worker.export_models(state.worker)

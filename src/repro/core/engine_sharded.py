@@ -130,6 +130,16 @@ final certificates *identical* to the single-device engine — including
 fail-stop masks and laggard compute credit. ``tests/test_sharded_engine.py``
 pins this on 8 forced host devices.
 
+Serving edge: the train->serve publish hook
+(:meth:`~repro.core.engine.TMSNEngine.attach_publisher` +
+``EngineConfig.publish_every_k``/``publish_eps``) is inherited
+unchanged — ``run()`` and :meth:`_maybe_publish` live on the base
+class, publishing happens at host-side chunk boundaries, and the chunk
+outputs (``state.certs``/``state.alive``/the worker pytree) are global
+arrays under ``shard_map``, so exporting the best-certificate row
+gathers exactly one worker's model regardless of sharding. The jitted
+round step is untouched in both engines.
+
 Worker contract addition: inside the shard-mapped step the
 :class:`~repro.core.worker.BatchedTMSNWorker` methods see *local*
 shards (leading axis ``W_local``, not ``W``). Workers must therefore

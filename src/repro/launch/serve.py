@@ -1,7 +1,17 @@
-"""Batched serving driver: prefill a batch of prompts, then decode with
-a re-buffered KV cache (prefill caches are copied into max_len decode
-buffers). CPU-runnable on reduced configs; the same step functions are
-what the dry-run lowers for the production mesh.
+"""Batched serving driver, rebuilt on the continuous-batching loop in
+:mod:`repro.launch.serving`: one batched prefill, caches re-buffered
+into max_len decode buffers, then per-slot decode — with the sampling
+policy actually wired (``greedy`` argmax vs seeded temperature
+sampling) and honest timing: both jitted step functions are compiled
+during an explicit warm-up reported as ``compile_s``, so ``prefill_s``
+and ``decode_s`` are steady-state numbers, and ``tok_per_s`` counts
+exactly the ``batch * (gen - 1)`` decode-step tokens it divides by
+(the prefill-produced first token is reported separately).
+
+With no adoption slot the loop serves the constructor params
+throughout and is bit-identical to the legacy scalar-``pos`` serve
+path (pinned in tests/test_serving.py). Pass ``slot=`` to serve a
+live, improving ensemble — see examples/serve_live.py.
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
       --batch 2 --prompt-len 16 --gen 16
@@ -10,75 +20,78 @@ what the dry-run lowers for the production mesh.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.launch.steps import make_prefill_step, make_serve_step
-from repro.models import init_cache, init_params
-from repro.models.config import layer_segments
+from repro.launch.serving import (
+    AdoptionSlot,
+    ContinuousServer,
+    Request,
+    ServingConfig,
+    rebuffer_caches,  # noqa: F401  — canonical home moved to serving.py
+)
+from repro.models import init_params
 
 
-def rebuffer_caches(cfg, prefill_caches, batch: int, max_len: int, prompt_len: int, enc_len: int):
-    """Copy prefill caches (sized to the prompt) into max_len buffers."""
-    full = init_cache(cfg, batch, max_len, enc_len=enc_len)
-    out = []
-    for (unit, reps), seg_full, seg_pre in zip(layer_segments(cfg), full, prefill_caches):
-        seg_out = []
-        for spec, buf_full, buf_pre in zip(unit, seg_full, seg_pre):
-            if spec.kind == "ssm":
-                seg_out.append(tuple(jnp.asarray(p, b.dtype) for b, p in zip(buf_full, buf_pre)))
-                continue
-            entry = []
-            for bi, (b_full, b_pre) in enumerate(zip(buf_full, buf_pre)):
-                if b_full.shape == b_pre.shape:  # cross-attn K/V: static
-                    entry.append(jnp.asarray(b_pre, b_full.dtype))
-                else:  # self-attn K/V: write the prompt prefix
-                    entry.append(
-                        jax.lax.dynamic_update_slice_in_dim(
-                            b_full, b_pre.astype(b_full.dtype), 0, axis=2
-                        )
-                    )
-            seg_out.append(tuple(entry))
-        out.append(tuple(seg_out))
-    return out
-
-
-def serve(cfg, batch: int, prompt_len: int, gen: int, seed: int = 0, greedy: bool = True):
+def serve(
+    cfg,
+    batch: int,
+    prompt_len: int,
+    gen: int,
+    seed: int = 0,
+    greedy: bool = True,
+    temperature: float = 1.0,
+    slot: AdoptionSlot | None = None,
+):
+    """Generate ``gen`` tokens (the prefill token + ``gen - 1`` decode
+    steps) for ``batch`` random prompts. Returns generated tokens plus
+    compile/prefill/decode timings, each measuring only what its name
+    says."""
     key = jax.random.PRNGKey(seed)
     params = init_params(cfg, key)
-    prompts = jax.random.randint(jax.random.fold_in(key, 1), (batch, prompt_len), 0, cfg.vocab, jnp.int32)
-    b = {"tokens": prompts, "labels": prompts, "mask": jnp.ones_like(prompts, jnp.float32)}
+    prompts = jax.random.randint(
+        jax.random.fold_in(key, 1), (batch, prompt_len), 0, cfg.vocab, jnp.int32
+    )
+    frontends = [None] * batch
     if cfg.frontend:
-        b["frontend_embeds"] = (
-            jax.random.normal(jax.random.fold_in(key, 2), (batch, cfg.frontend_len, cfg.frontend_dim)) * 0.02
+        fe = (
+            jax.random.normal(
+                jax.random.fold_in(key, 2), (batch, cfg.frontend_len, cfg.frontend_dim)
+            )
+            * 0.02
         )
-    prefill_fn = jax.jit(make_prefill_step(cfg))
-    serve_fn = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
+        frontends = list(np.asarray(fe, np.float32))
 
-    t0 = time.time()
-    next_tok, pre_caches = prefill_fn(params, b)
-    max_len = prompt_len + gen
-    enc_len = cfg.frontend_len if cfg.is_encdec() else 0
-    caches = rebuffer_caches(cfg, pre_caches, batch, max_len, prompt_len, enc_len)
-    t_prefill = time.time() - t0
-
-    toks = [np.asarray(next_tok)]
-    t0 = time.time()
-    tok = next_tok
-    for i in range(gen - 1):
-        tok, caches = serve_fn(params, tok, caches, jnp.asarray(prompt_len + i, jnp.int32))
-        toks.append(np.asarray(tok))
-    t_decode = time.time() - t0
-    gen_tokens = np.concatenate(toks, axis=1)
+    scfg = ServingConfig(
+        slots=batch,
+        prompt_len=prompt_len,
+        max_new=gen,
+        greedy=greedy,
+        temperature=temperature,
+        seed=seed,
+    )
+    server = ContinuousServer(cfg, scfg, params)
+    compile_s = server.warmup()
+    prompts_h = np.asarray(prompts)
+    requests = [
+        Request(rid=i, prompt=prompts_h[i], max_new=gen, frontend=frontends[i])
+        for i in range(batch)
+    ]
+    results, metrics = server.run(requests, slot=slot)
+    gen_tokens = np.stack([r.tokens for r in results])  # (batch, gen), rid order
     return {
         "generated": gen_tokens,
-        "prefill_s": t_prefill,
-        "decode_s": t_decode,
-        "tok_per_s": batch * (gen - 1) / max(t_decode, 1e-9),
+        "compile_s": compile_s,
+        "prefill_s": metrics["prefill_s"],
+        "decode_s": metrics["decode_s"],
+        # decode-only throughput over decode-only time: the prefill
+        # token is in `generated` but not in either factor
+        "tok_per_s": metrics["decode_tok_per_s"],
+        "adoptions": metrics["adoptions"],
+        "metrics": metrics,
     }
 
 
@@ -89,13 +102,24 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--sample", action="store_true", help="temperature sampling")
+    ap.add_argument("--temperature", type=float, default=1.0)
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    out = serve(cfg, args.batch, args.prompt_len, args.gen)
-    print(f"prefill {out['prefill_s']:.2f}s decode {out['decode_s']:.2f}s "
-          f"{out['tok_per_s']:.1f} tok/s")
+    out = serve(
+        cfg,
+        args.batch,
+        args.prompt_len,
+        args.gen,
+        greedy=not args.sample,
+        temperature=args.temperature,
+    )
+    print(
+        f"compile {out['compile_s']:.2f}s prefill {out['prefill_s']:.2f}s "
+        f"decode {out['decode_s']:.2f}s {out['tok_per_s']:.1f} tok/s"
+    )
     print("sample tokens:", out["generated"][0][:16])
 
 

@@ -1,0 +1,491 @@
+"""Always-on serving tier: continuous batching over the live TMSN
+ensemble, with zero-downtime model adoption.
+
+The paper's core move — broadcast only on improvement, never block —
+applied to the train->serve edge:
+
+  * :class:`AdoptionSlot` is the hand-off point. The engine publishes
+    best-certificate snapshots into a **double-buffered** slot
+    (write-then-flip with a version counter): the writer always fills
+    the inactive buffer and flips the version last, so a reader that
+    re-checks the version can never observe a torn snapshot. This is
+    the bounded-staleness model from ASAP (PAPERS.md): a batch may
+    decode under a slightly stale snapshot, never a torn one.
+  * :class:`ContinuousServer` is a request-driven serving loop with a
+    slot-based continuous batcher: a fixed (slots, max_len) cache is
+    allocated once; finished sequences free their row and queued
+    requests claim it between decode steps (single-row prefill +
+    cache insert). Each row decodes at its own position — the (b,)
+    ``pos`` vector threaded through :func:`repro.models.decode_step`.
+  * Adoption happens between decode steps by swapping the params
+    argument of the already-compiled step functions — same shapes,
+    same dtypes, so there is **no recompilation and no dropped
+    request** on adoption (the elastic-membership trick, applied to
+    the serving fleet). ``compile_counts()`` exposes the jit cache
+    sizes so tests and benchmarks can assert the no-recompile
+    property.
+
+CPU-runnable on reduced configs; the step functions are the same ones
+the dry-run lowers for the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import init_cache
+from repro.models.config import ArchConfig, layer_segments
+
+
+# ----------------------------------------------------------------------------
+# cache re-buffering: prompt-sized prefill caches -> max_len decode buffers
+# ----------------------------------------------------------------------------
+
+
+def rebuffer_caches(cfg, prefill_caches, batch: int, max_len: int, prompt_len: int, enc_len: int):
+    """Copy prefill caches (sized to the prompt) into max_len buffers."""
+    full = init_cache(cfg, batch, max_len, enc_len=enc_len)
+    out = []
+    for (unit, reps), seg_full, seg_pre in zip(layer_segments(cfg), full, prefill_caches):
+        seg_out = []
+        for spec, buf_full, buf_pre in zip(unit, seg_full, seg_pre):
+            if spec.kind == "ssm":
+                seg_out.append(tuple(jnp.asarray(p, b.dtype) for b, p in zip(buf_full, buf_pre)))
+                continue
+            entry = []
+            for bi, (b_full, b_pre) in enumerate(zip(buf_full, buf_pre)):
+                if b_full.shape == b_pre.shape:  # cross-attn K/V: static
+                    entry.append(jnp.asarray(b_pre, b_full.dtype))
+                else:  # self-attn K/V: write the prompt prefix
+                    entry.append(
+                        jax.lax.dynamic_update_slice_in_dim(
+                            b_full, b_pre.astype(b_full.dtype), 0, axis=2
+                        )
+                    )
+            seg_out.append(tuple(entry))
+        out.append(tuple(seg_out))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# the adoption slot
+# ----------------------------------------------------------------------------
+
+
+class Snapshot(NamedTuple):
+    """One published model: the params pytree plus its provenance."""
+
+    version: int  # publish counter, 1-based; monotonically increasing
+    params: Any  # host-side params pytree (same treedef as init_params)
+    cert: float  # the certificate the snapshot was published at
+    round: int  # engine round the snapshot was exported at
+
+
+class AdoptionSlot:
+    """Double-buffered single-slot snapshot exchange (write-then-flip).
+
+    The writer (engine) fills the *inactive* buffer, then flips the
+    version counter; the active buffer — the one ``version`` points
+    readers at — is never written. A reader re-checks the version after
+    copying out the buffer reference and retries if a concurrent flip
+    moved it, so an :meth:`acquire` can return a stale snapshot (by at
+    most the publish cadence) but never a torn one. Writers are
+    serialized by a lock; readers never take it.
+    """
+
+    def __init__(self) -> None:
+        self._buffers: list[tuple[Any, float, int] | None] = [None, None]
+        self._version = 0  # 0 = nothing published yet
+        self._write_lock = threading.Lock()
+        self.publishes = 0
+
+    @property
+    def version(self) -> int:
+        """Latest published version (cheap staleness probe)."""
+        return self._version
+
+    @property
+    def latest_cert(self) -> float:
+        """Certificate of the freshest published snapshot (nan before
+        the first publish). Used for the stale-vs-fresh gap metric."""
+        snap = self.acquire()
+        return float("nan") if snap is None else snap.cert
+
+    def publish(self, params: Any, cert: float, round: int = 0) -> int:
+        """Write-then-flip. Returns the new version."""
+        with self._write_lock:
+            v = self._version + 1
+            # the buffer v % 2 is inactive while version == v - 1:
+            # readers are pointed at (v - 1) % 2
+            self._buffers[v % 2] = (params, float(cert), int(round))
+            self._version = v  # flip LAST — the publication point
+            self.publishes += 1
+            return v
+
+    def acquire(self) -> Snapshot | None:
+        """Latest snapshot, or None before the first publish. Never
+        torn: the version is re-checked after the buffer read and the
+        read retries if a flip raced it."""
+        while True:
+            v0 = self._version
+            if v0 == 0:
+                return None
+            buf = self._buffers[v0 % 2]
+            if self._version == v0:
+                params, cert, rnd = buf
+                return Snapshot(v0, params, cert, rnd)
+
+
+# ----------------------------------------------------------------------------
+# requests
+# ----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``prompt`` must be (prompt_len,) int —
+    the batcher keeps fixed shapes, so all requests share the server's
+    prompt length. ``max_new`` counts generated tokens *including* the
+    prefill-produced first token; it must be in [1, cfg.max_new]."""
+
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    frontend: np.ndarray | None = None  # (frontend_len, frontend_dim)
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: np.ndarray  # (n_generated,) int32, prefill token first
+    latency_s: float  # queue entry -> last token
+    versions: tuple[int, ...]  # snapshot versions this request decoded under
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Continuous-batcher shape and sampling policy. All shapes are
+    fixed at construction — admission and adoption never retrace."""
+
+    slots: int  # concurrent sequences (the fixed batch dimension)
+    prompt_len: int
+    max_new: int  # per-request cap; sets max_len = prompt_len + max_new
+    greedy: bool = True
+    temperature: float = 1.0
+    seed: int = 0
+    #: check the adoption slot every N decode steps (1 = every step);
+    #: larger values trade staleness for fewer host version probes
+    adopt_every: int = 1
+
+    def __post_init__(self) -> None:
+        if self.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {self.slots}")
+        if self.prompt_len < 1:
+            raise ValueError(f"prompt_len must be >= 1, got {self.prompt_len}")
+        if self.max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {self.max_new}")
+        if self.adopt_every < 1:
+            raise ValueError(f"adopt_every must be >= 1, got {self.adopt_every}")
+        if not self.greedy and not self.temperature > 0.0:
+            raise ValueError(
+                f"temperature must be > 0 for sampling, got {self.temperature}"
+            )
+
+
+# ----------------------------------------------------------------------------
+# the server
+# ----------------------------------------------------------------------------
+
+
+class ContinuousServer:
+    """Slot-based continuous batcher over fixed-shape decode buffers.
+
+    Two jitted entry points, both warmed once by :meth:`warmup`:
+
+      * prefill — traced at (slots, prompt_len) for the batched
+        bootstrap and at (1, prompt_len) for mid-run admission;
+      * decode — one trace at (slots,) per-row positions, params passed
+        as an argument so adoption is a pure data swap.
+
+    A no-publish run (``slot=None``, all requests admitted at start,
+    equal lengths) decodes in lockstep — every row of the (b,) position
+    vector equal — and is bit-identical to the legacy scalar-``pos``
+    serve loop (pinned in tests/test_serving.py).
+    """
+
+    def __init__(self, cfg: ArchConfig, scfg: ServingConfig, params: Any) -> None:
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = jax.device_put(params)
+        self.enc_len = cfg.frontend_len if cfg.is_encdec() else 0
+        self.max_len = scfg.prompt_len + scfg.max_new
+        self._prefill = jax.jit(make_prefill_step(cfg))
+        self._decode = jax.jit(
+            make_decode_step(cfg, greedy=scfg.greedy, temperature=scfg.temperature),
+            donate_argnums=(2,),
+        )
+        self._insert = jax.jit(_insert_row, donate_argnums=(0,))
+        self._key = jax.random.PRNGKey(scfg.seed)
+        self.adopted_version = 0  # 0 = serving the constructor params
+        self.served_cert = float("nan")
+        self.adoptions = 0
+        self._warmed = False
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _batchify(self, prompts: list[np.ndarray], frontends: list) -> dict:
+        toks = jnp.asarray(np.stack(prompts).astype(np.int32))
+        b = {
+            "tokens": toks,
+            "labels": toks,
+            "mask": jnp.ones_like(toks, jnp.float32),
+        }
+        if self.cfg.frontend is not None:
+            fes = [
+                np.zeros((self.cfg.frontend_len, self.cfg.frontend_dim), np.float32)
+                if fe is None
+                else np.asarray(fe, np.float32)
+                for fe in frontends
+            ]
+            b["frontend_embeds"] = jnp.asarray(np.stack(fes))
+        return b
+
+    def compile_counts(self) -> dict[str, int]:
+        """jit-cache sizes of the serving-path entry points — the
+        no-recompile-after-warmup assertion reads these."""
+        return {
+            "prefill": self._prefill._cache_size(),
+            "decode": self._decode._cache_size(),
+            "insert": self._insert._cache_size(),
+        }
+
+    def warmup(self) -> float:
+        """Compile every serving-path trace on dummy inputs; returns
+        the wall time spent (reported as ``compile_s``). Idempotent."""
+        t0 = time.perf_counter()
+        B, P = self.scfg.slots, self.scfg.prompt_len
+        zeros = [np.zeros(P, np.int32) for _ in range(B)]
+        nones = [None] * B
+        tok, pre = self._prefill(self.params, self._batchify(zeros, nones))
+        caches = rebuffer_caches(self.cfg, pre, B, self.max_len, P, self.enc_len)
+        _, pre1 = self._prefill(self.params, self._batchify(zeros[:1], nones[:1]))
+        caches = self._insert(caches, pre1, jnp.asarray(0, jnp.int32))
+        pos = np.full((B,), P, np.int32)
+        tok, caches = self._decode(
+            self.params, tok, caches, jnp.asarray(pos), self._key
+        )
+        jax.block_until_ready(tok)
+        self._warmed = True
+        return time.perf_counter() - t0
+
+    def adopt(self, slot: AdoptionSlot) -> bool:
+        """Adopt the newest published snapshot if it is fresher than
+        the one being served. Returns True on an actual swap."""
+        if slot.version == self.adopted_version:
+            return False
+        snap = slot.acquire()
+        if snap is None or snap.version == self.adopted_version:
+            return False
+        self.params = jax.device_put(snap.params)
+        self.adopted_version = snap.version
+        self.served_cert = snap.cert
+        self.adoptions += 1
+        return True
+
+    # -- the loop -----------------------------------------------------------
+
+    def run(
+        self,
+        requests: list[Request],
+        slot: AdoptionSlot | None = None,
+        step_hook: Callable[["ContinuousServer", int], None] | None = None,
+    ) -> tuple[list[RequestResult], dict]:
+        """Serve ``requests`` to completion. All requests are queued at
+        t=0; admission is continuous (freed slots are re-claimed between
+        decode steps). Returns (results sorted by rid, metrics)."""
+        scfg = self.scfg
+        B, P = scfg.slots, scfg.prompt_len
+        for r in requests:
+            if not 1 <= r.max_new <= scfg.max_new:
+                raise ValueError(
+                    f"request {r.rid}: max_new must be in [1, {scfg.max_new}], "
+                    f"got {r.max_new}"
+                )
+            if np.shape(r.prompt) != (P,):
+                raise ValueError(
+                    f"request {r.rid}: prompt must be ({P},), got {np.shape(r.prompt)}"
+                )
+        counts0 = self.compile_counts() if self._warmed else None
+        pending = deque(requests)
+        results: list[RequestResult] = []
+
+        active = [False] * B
+        req_of: list[Request | None] = [None] * B
+        toks: list[list[int]] = [[] for _ in range(B)]
+        versions: list[set[int]] = [set() for _ in range(B)]
+        pos_h = np.zeros((B,), np.int32)
+        tok_h = np.zeros((B, 1), np.int32)
+
+        step_wall: list[float] = []
+        adoption_steps: list[int] = []
+        cert_gaps: list[float] = []
+        prefill_s = 0.0
+
+        t_run0 = time.perf_counter()
+
+        def retire(s: int) -> None:
+            req = req_of[s]
+            results.append(
+                RequestResult(
+                    rid=req.rid,
+                    tokens=np.asarray(toks[s], np.int32),
+                    latency_s=time.perf_counter() - t_run0,
+                    versions=tuple(sorted(versions[s])),
+                )
+            )
+            active[s] = False
+            req_of[s] = None
+
+        def bookkeep_admit(s: int, req: Request, first_tok: int) -> None:
+            active[s] = True
+            req_of[s] = req
+            toks[s] = [first_tok]
+            versions[s] = {self.adopted_version}
+            pos_h[s] = P
+            tok_h[s, 0] = first_tok
+            if len(toks[s]) >= req.max_new:
+                retire(s)
+
+        # batched bootstrap: a full first wave prefills in one call —
+        # the same batched-prefill + rebuffer path as the legacy serve
+        t0 = time.perf_counter()
+        if len(pending) >= B:
+            wave = [pending.popleft() for _ in range(B)]
+            bdict = self._batchify([r.prompt for r in wave], [r.frontend for r in wave])
+            ntok, pre = self._prefill(self.params, bdict)
+            caches = rebuffer_caches(self.cfg, pre, B, self.max_len, P, self.enc_len)
+            ntok_h = np.asarray(ntok)
+            for s, r in enumerate(wave):
+                bookkeep_admit(s, r, int(ntok_h[s, 0]))
+        else:
+            caches = init_cache(self.cfg, B, self.max_len, enc_len=self.enc_len)
+        prefill_s += time.perf_counter() - t0
+
+        step = 0
+        while True:
+            # admission: freed slots claim queued requests (single-row
+            # prefill + in-place cache insert; fixed shapes throughout)
+            for s in range(B):
+                while not active[s] and pending:
+                    req = pending.popleft()
+                    t0 = time.perf_counter()
+                    bdict = self._batchify([req.prompt], [req.frontend])
+                    ntok1, pre1 = self._prefill(self.params, bdict)
+                    caches = self._insert(caches, pre1, jnp.asarray(s, jnp.int32))
+                    prefill_s += time.perf_counter() - t0
+                    bookkeep_admit(s, req, int(np.asarray(ntok1)[0, 0]))
+            if not any(active):
+                break
+
+            # adoption between decode steps: a cheap version probe, then
+            # a torn-read-safe acquire only when the slot moved
+            adopted = False
+            if slot is not None and step % scfg.adopt_every == 0:
+                adopted = self.adopt(slot)
+            if slot is not None:
+                fresh = slot.latest_cert
+                if np.isfinite(self.served_cert) and np.isfinite(fresh):
+                    cert_gaps.append(self.served_cert - fresh)
+
+            t0 = time.perf_counter()
+            key = jax.random.fold_in(self._key, step)
+            tok_d, caches = self._decode(
+                self.params, jnp.asarray(tok_h), caches, jnp.asarray(pos_h), key
+            )
+            # host sync: completions are decided here (np.array copies —
+            # admission writes fresh first-tokens into freed rows)
+            tok_h = np.array(tok_d)
+            step_wall.append(time.perf_counter() - t0)
+            if adopted:
+                adoption_steps.append(step)
+
+            for s in range(B):
+                if not active[s]:
+                    continue
+                toks[s].append(int(tok_h[s, 0]))
+                versions[s].add(self.adopted_version)
+                pos_h[s] += 1
+                if len(toks[s]) >= req_of[s].max_new:
+                    retire(s)
+            step += 1
+            if step_hook is not None:
+                step_hook(self, step)
+
+        wall_s = time.perf_counter() - t_run0
+        results.sort(key=lambda r: r.rid)
+        decode_tok = sum(len(r.tokens) - 1 for r in results)
+        latencies = np.asarray([r.latency_s for r in results] or [0.0])
+        walls_ms = np.asarray(step_wall or [0.0]) * 1e3
+        adopt_ms = np.asarray([step_wall[i] for i in adoption_steps] or [0.0]) * 1e3
+        steady = [w for i, w in enumerate(step_wall) if i not in set(adoption_steps)]
+        steady_ms = np.asarray(steady or [0.0]) * 1e3
+        counts1 = self.compile_counts()
+        metrics = {
+            "wall_s": wall_s,
+            "requests_completed": len(results),
+            "dropped_requests": len(requests) - len(results),
+            "req_per_s": len(results) / max(wall_s, 1e-9),
+            "latency_p50_s": float(np.percentile(latencies, 50)),
+            "latency_p99_s": float(np.percentile(latencies, 99)),
+            "decode_steps": step,
+            "decode_tokens": decode_tok,
+            "prefill_s": prefill_s,
+            "decode_s": float(np.sum(step_wall)),
+            "decode_tok_per_s": decode_tok / max(float(np.sum(step_wall)), 1e-9),
+            "step_p50_ms": float(np.percentile(walls_ms, 50)),
+            "step_p99_ms": float(np.percentile(walls_ms, 99)),
+            "adoptions": self.adoptions,
+            "adoption_steps": list(adoption_steps),
+            "adoption_blip_p99_ms": float(np.percentile(adopt_ms, 99)),
+            "steady_step_p99_ms": float(np.percentile(steady_ms, 99)),
+            "stale_cert_gap_mean": float(np.mean(cert_gaps)) if cert_gaps else 0.0,
+            "stale_cert_gap_max": float(np.max(cert_gaps)) if cert_gaps else 0.0,
+            "recompiles": (
+                sum(counts1.values()) - sum(counts0.values())
+                if counts0 is not None
+                else None
+            ),
+        }
+        return results, metrics
+
+
+def _insert_row(caches, pre_caches, row):
+    """Write a single prefilled request (batch-1 prefill caches) into
+    row ``row`` of the full decode buffers.
+
+    One rule covers every cache kind: the batch-1 block is
+    dynamic-update-sliced at (0, row, 0, ...), which is a full row
+    overwrite for SSM state / conv tails / cross-attn K/V (shapes match
+    except batch) and a prompt-prefix write for self-attn K/V (the pre
+    block is shorter along the seq axis). Stale entries beyond the
+    prefix belong to the row's previous occupant and sit at key
+    positions > the new request's positions, so the causal mask hides
+    them until they are overwritten.
+    """
+
+    def one(b_full, b_pre):
+        start = (jnp.asarray(0, jnp.int32), row) + (jnp.asarray(0, jnp.int32),) * (
+            b_full.ndim - 2
+        )
+        return jax.lax.dynamic_update_slice(b_full, b_pre.astype(b_full.dtype), start)
+
+    return jax.tree.map(one, caches, pre_caches)

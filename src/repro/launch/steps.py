@@ -90,12 +90,45 @@ def make_prefill_step(cfg: ArchConfig) -> Callable:
 
 
 def make_serve_step(cfg: ArchConfig) -> Callable:
+    """Legacy greedy decode step (params, token, caches, pos) — kept for
+    the dry-run, which lowers against the scalar-``pos`` decode specs.
+    The serving loop uses :func:`make_decode_step`."""
+
     def serve_step(params, token, caches, pos):
         logits, caches = decode_step(params, cfg, token, caches, pos)
         next_token = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
         return next_token, caches
 
     return serve_step
+
+
+def make_decode_step(
+    cfg: ArchConfig, greedy: bool = True, temperature: float = 1.0
+) -> Callable:
+    """Decode-step factory with an explicit sampling policy.
+
+    ``pos`` may be a () scalar (lockstep batch) or a (b,) per-slot
+    vector (continuous batching: each row decodes at its own depth).
+    The returned step takes ``(params, token, caches, pos, key)``; the
+    ``key`` argument is part of the signature in both modes so greedy
+    and sampling traces are call-compatible (greedy ignores it).
+    Sampling divides logits by ``temperature`` before a categorical
+    draw — per-row independence comes from the (b,)-batched logits,
+    so one key per step suffices.
+    """
+    if not greedy and not temperature > 0.0:
+        raise ValueError(f"temperature must be > 0 for sampling, got {temperature}")
+
+    def step(params, token, caches, pos, key):
+        logits, caches = decode_step(params, cfg, token, caches, pos)
+        last = logits[:, -1, :]
+        if greedy:
+            nxt = jnp.argmax(last, axis=-1)
+        else:
+            nxt = jax.random.categorical(key, last / temperature, axis=-1)
+        return nxt[:, None].astype(jnp.int32), caches
+
+    return step
 
 
 def dryrun_cfg(cfg: ArchConfig) -> ArchConfig:

@@ -2,9 +2,14 @@
 (DeepSeek-V3 multi-head latent attention, compressed KV cache), and
 cross-attention (enc-dec). Full-sequence and single-token-decode paths.
 
-All shapes: x (b, s, d); caches are (b, S_max, ...) with a scalar
-``pos`` write index (batch decodes in lockstep — the serving layer
-batches same-phase requests).
+All shapes: x (b, s, d); caches are (b, S_max, ...). The decode-path
+``pos`` write index is either a () scalar (batch decodes in lockstep)
+or a (b,) vector (continuous batching: each row decodes at its own
+position — the serving layer admits new requests into freed slots, so
+rows are at different depths). A scalar is broadcast to (b,), and the
+per-row scatter write places exactly the same elements as the old
+lockstep dynamic-slice write, so scalar-pos decode is bit-identical to
+the pre-vectorized path.
 """
 
 from __future__ import annotations
@@ -91,7 +96,7 @@ def gqa_decode(
     x: jnp.ndarray,  # (b, 1, d)
     cache_k: jnp.ndarray,  # (b, S, K, hd)
     cache_v: jnp.ndarray,
-    pos: jnp.ndarray,  # () int32 — current write position
+    pos: jnp.ndarray,  # () or (b,) int32 — current write position(s)
     cfg: ArchConfig,
     window: int | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -100,19 +105,20 @@ def gqa_decode(
     hd = cfg.hd()
     H, K = cfg.num_heads, cfg.num_kv_heads
     G = H // K
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos_b = jnp.broadcast_to(pos, (b,)).astype(jnp.int32)
+    positions = pos_b[:, None]
     q, k_new, v_new = _gqa_qkv(params, x, positions, cfg)
     S = cache_k.shape[1]
     # ring-buffer mode: a windowed layer whose cache is sized below the
     # decode horizon writes at pos % S; keys carry their absolute-pos
     # RoPE phases so the ring is transparent to attention.
-    write_pos = pos % S
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), write_pos, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), write_pos, axis=1)
+    write_pos = pos_b % S
+    rows = jnp.arange(b)
+    cache_k = cache_k.at[rows, write_pos].set(k_new[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[rows, write_pos].set(v_new[:, 0].astype(cache_v.dtype))
     slot = jnp.arange(S, dtype=jnp.int32)
-    # absolute position currently held by each ring slot
-    kpos_row = pos - (pos - slot) % S
-    kpos = jnp.broadcast_to(kpos_row, (b, S))
+    # absolute position currently held by each ring slot, per row
+    kpos = pos_b[:, None] - (pos_b[:, None] - slot[None, :]) % S
     mask = _causal_window_mask(positions, kpos, window) & (kpos[:, None, :] >= 0)
     qg = q.reshape(b, 1, K, G, hd)
     out = _sdpa(qg, cache_k.astype(x.dtype), cache_v.astype(x.dtype), mask, hd ** -0.5)
@@ -211,17 +217,17 @@ def mla_decode(
     x: jnp.ndarray,
     cache_ckv: jnp.ndarray,  # (b, S, kv_lora_rank)
     cache_krope: jnp.ndarray,  # (b, S, qk_rope_head_dim)
-    pos: jnp.ndarray,
+    pos: jnp.ndarray,  # () or (b,) int32
     cfg: ArchConfig,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos_b = jnp.broadcast_to(pos, (b,)).astype(jnp.int32)
+    positions = pos_b[:, None]
     q_lat, q_rope = _mla_q(params, x, positions, cfg)
     c_new, r_new = _mla_kv_latent(params, x, positions, cfg)
-    cache_ckv = jax.lax.dynamic_update_slice_in_dim(cache_ckv, c_new.astype(cache_ckv.dtype), pos, axis=1)
-    cache_krope = jax.lax.dynamic_update_slice_in_dim(
-        cache_krope, r_new.astype(cache_krope.dtype), pos, axis=1
-    )
+    rows = jnp.arange(b)
+    cache_ckv = cache_ckv.at[rows, pos_b].set(c_new[:, 0].astype(cache_ckv.dtype))
+    cache_krope = cache_krope.at[rows, pos_b].set(r_new[:, 0].astype(cache_krope.dtype))
     S = cache_ckv.shape[1]
     kpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (b, S))
     mask = _causal_window_mask(positions, kpos, None)

@@ -220,7 +220,9 @@ def prefill(params, cfg: ArchConfig, batch: dict) -> tuple[jnp.ndarray, list]:
 def decode_step(
     params, cfg: ArchConfig, token: jnp.ndarray, caches: list, pos: jnp.ndarray, batch: dict | None = None
 ) -> tuple[jnp.ndarray, list]:
-    """One-token decode. token (b, 1) int32; pos () int32 write index."""
+    """One-token decode. token (b, 1) int32; pos is the cache write
+    index — () int32 for lockstep batches, or (b,) int32 for
+    continuous batching (each row at its own depth)."""
     x = params["embed"][token].astype(_dtype(cfg.compute_dtype))
     x, caches = decode_stack(
         params["decoder"], layer_segments(cfg), cfg, x, caches, pos,

@@ -84,7 +84,7 @@ class TestConfigReference:
     def _env_vars_in_code(self) -> set[str]:
         src = (REPO / "src" / "repro" / "core" / "engine.py").read_text()
         # only variables the code actually READS (not prose mentions)
-        return set(re.findall(r"_env_(?:int|str)\(\"(REPRO_[A-Z_]+)\"", src))
+        return set(re.findall(r"_env_(?:int|str|float)\(\"(REPRO_[A-Z_]+)\"", src))
 
     def test_every_env_override_documented(self):
         doc = self._doc()

@@ -23,6 +23,7 @@ INT_KNOBS = [
     ("REPRO_CROSS_POD_TOP_K", "cross_pod_top_k", 1),
     ("REPRO_INFLIGHT_CAPACITY", "inflight_capacity", 0),
     ("REPRO_SPARE_SLOTS", "spare_slots", 0),
+    ("REPRO_PUBLISH_EVERY_K", "publish_every_k", 0),
 ]
 
 ALL_VARS = [v for v, _, _ in INT_KNOBS] + [
@@ -30,6 +31,7 @@ ALL_VARS = [v for v, _, _ in INT_KNOBS] + [
     "REPRO_ROUND_STEP_IMPL",
     "REPRO_CONTROL_PLANE",
     "REPRO_FAULT_PLAN",
+    "REPRO_PUBLISH_EPS",
 ]
 
 
@@ -228,6 +230,62 @@ class TestFaultPlanOverride:
         assert eng._fault is None
 
 
+class TestPublishKnobs:
+    """The serving-edge knobs: `publish_every_k` rides the shared int
+    parametrization above; `publish_eps` is the first FLOAT knob
+    (`_env_float`, same unset/empty/malformed contract)."""
+
+    def test_eps_unset_defaults_zero(self):
+        assert EngineConfig().publish_eps == 0.0
+
+    def test_eps_env_value_becomes_default(self, monkeypatch):
+        monkeypatch.setenv("REPRO_PUBLISH_EPS", "0.25")
+        assert EngineConfig().publish_eps == 0.25
+
+    @pytest.mark.parametrize("raw", ["", "   ", "\t"])
+    def test_eps_empty_or_whitespace_falls_back(self, raw, monkeypatch):
+        monkeypatch.setenv("REPRO_PUBLISH_EPS", raw)
+        assert EngineConfig().publish_eps == 0.0
+
+    @pytest.mark.parametrize("raw", ["x", "1..5", "0.1f", "1,5"])
+    def test_eps_malformed_raises_naming_the_var(self, raw, monkeypatch):
+        monkeypatch.setenv("REPRO_PUBLISH_EPS", raw)
+        with pytest.raises(ValueError, match="REPRO_PUBLISH_EPS"):
+            EngineConfig()
+
+    def test_eps_explicit_arg_beats_env(self, monkeypatch):
+        monkeypatch.setenv("REPRO_PUBLISH_EPS", "0.5")
+        assert EngineConfig(publish_eps=0.125).publish_eps == 0.125
+
+    def test_eps_scientific_notation_accepted(self, monkeypatch):
+        monkeypatch.setenv("REPRO_PUBLISH_EPS", " 1e-3 ")
+        assert EngineConfig().publish_eps == 1e-3
+
+    def test_negative_eps_rejected_at_engine_construction(self):
+        with pytest.raises(ValueError, match="publish_eps"):
+            TMSNEngine(_StubWorker(), EngineConfig(n_workers=2, publish_eps=-0.1))
+
+    def test_nan_eps_rejected_at_engine_construction(self):
+        with pytest.raises(ValueError, match="publish_eps"):
+            TMSNEngine(
+                _StubWorker(), EngineConfig(n_workers=2, publish_eps=float("nan"))
+            )
+
+    def test_every_k_zero_disables_and_negative_rejected(self):
+        TMSNEngine(_StubWorker(), EngineConfig(n_workers=2, publish_every_k=0))
+        with pytest.raises(ValueError, match="publish_every_k"):
+            TMSNEngine(_StubWorker(), EngineConfig(n_workers=2, publish_every_k=-1))
+
+    def test_attach_publisher_requires_cadence(self):
+        """A publisher on a publish_every_k=0 engine would silently
+        never fire — reject the attach instead."""
+        from repro.launch.serving import AdoptionSlot
+
+        eng = TMSNEngine(_StubWorker(), EngineConfig(n_workers=2))
+        with pytest.raises(ValueError, match="publish_every_k"):
+            eng.attach_publisher(AdoptionSlot())
+
+
 class TestSpareSlotsKnob:
     def test_env_out_of_range_rejected_at_engine_construction(self, monkeypatch):
         monkeypatch.setenv("REPRO_SPARE_SLOTS", "2")
@@ -275,6 +333,7 @@ def test_every_env_knob_is_a_config_field():
     assert "fault_spec" in fields
     assert "fault_plan" in fields
     assert "membership" in fields
+    assert "publish_eps" in fields
 
 
 class _StubWorker:

@@ -20,7 +20,7 @@ from repro.launch.steps import (
     make_train_step,
     shape_applicable,
 )
-from repro.models import init_params
+from repro.models import init_params, loss_fn
 from repro.optim import AdamWConfig, apply_updates, init_opt_state, warmup_cosine
 
 
@@ -119,21 +119,31 @@ class TestStepsOnHost:
 @pytest.mark.slow
 class TestTMSNSGD:
     def test_round_improves_and_certs_monotone(self):
+        """Improvement is measured on a FIXED held-out batch, before vs
+        after the run. The old assertion compared per-round training
+        losses, each computed on a fresh random batch — batch-to-batch
+        noise (~±0.05 at this scale) dwarfs the expected descent
+        (~0.003 over 4 rounds), so the test failed or passed on seed
+        luck, not on whether the round worked. The held-out descent is
+        deterministic per seed and an order of magnitude larger than
+        any cross-platform numeric jitter."""
         cfg = reduced(get_config("yi-9b"))
         opt_cfg = AdamWConfig(lr=1e-3)
         tcfg = TMSNSGDConfig(num_workers=2, local_steps=2, eps=0.0)
         params_w, opt_w, cert_w = init_tmsn_state(cfg, opt_cfg, tcfg, jax.random.PRNGKey(0))
         fn = jax.jit(make_tmsn_round(cfg, opt_cfg, tcfg), donate_argnums=(0, 1))
         key = jax.random.PRNGKey(1)
+        eval_batch = synthetic_token_batch(jax.random.fold_in(key, 999), 8, 32, cfg.vocab)
+        eval_fn = jax.jit(lambda p: loss_fn(p, cfg, eval_batch)[0])
+        loss_before = float(eval_fn(jax.tree.map(lambda a: a[0], params_w)))
         certs_hist = []
-        losses = []
         for r in range(4):
             batch = synthetic_token_batch(jax.random.fold_in(key, r), 2 * 2 * 2, 32, cfg.vocab)
             batch_w = {k: v.reshape((2, 2, 2) + v.shape[1:]) for k, v in batch.items()}
             params_w, opt_w, cert_w, loss = fn(params_w, opt_w, cert_w, batch_w)
-            losses.append(float(loss))
             certs_hist.append(np.asarray(cert_w).copy())
-        assert losses[-1] < losses[0]
+        loss_after = float(eval_fn(jax.tree.map(lambda a: a[0], params_w)))
+        assert loss_after < loss_before  # learns the token marginals
         for a, b in zip(certs_hist[1:], certs_hist[2:]):
             assert (b <= a + 1e-2).all()
 
